@@ -1,0 +1,53 @@
+"""Shared benchmark plumbing: workload suite, planner set, CSV emission."""
+from __future__ import annotations
+
+import math
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core import Planner  # noqa: E402
+from repro.core import baselines as B  # noqa: E402
+from repro.workloads import synth_profiles, synth_workloads  # noqa: E402
+
+PROFILES = synth_profiles()
+
+
+def workload_suite(n: int = 1131):
+    return synth_workloads(n)
+
+
+def plan_all(workloads, options_list):
+    planners = {o.name: Planner(o) for o in options_list}
+    rows = []
+    for wl in workloads:
+        rows.append((wl, {k: p.plan(wl, PROFILES) for k, p in planners.items()}))
+    return rows
+
+
+def normalized_costs(rows, names):
+    """Per-workload cost / Harpagon cost; inf when infeasible."""
+    out = {k: [] for k in names}
+    for _, plans in rows:
+        h = plans["harpagon"]
+        if not h.feasible:
+            continue
+        for k in names:
+            p = plans[k]
+            out[k].append(p.cost / h.cost if p.feasible else math.inf)
+    return out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timed(fn, *args, repeat: int = 3):
+    best = math.inf
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6

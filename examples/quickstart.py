@@ -1,0 +1,40 @@
+"""Quickstart: plan a multi-DNN session with Harpagon and compare all systems.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import Planner
+from repro.core.baselines import ALL_SYSTEMS
+from repro.core.bruteforce import optimal_cost
+from repro.workloads import synth_profiles
+from repro.workloads.apps import TRAFFIC, make_workload
+
+
+def main() -> None:
+    profiles = synth_profiles()
+    # the paper's traffic app: SSD detector -> {vehicle, pedestrian} classifiers
+    wl = make_workload(TRAFFIC, rate=150.0, slo=1.2)
+    print(f"workload: app={wl.app.name} rate=150/s slo={wl.slo}s "
+          f"modules={list(wl.app.modules)}\n")
+
+    plans = {}
+    for opts in ALL_SYSTEMS:
+        plans[opts.name] = Planner(opts).plan(wl, profiles)
+
+    h = plans["harpagon"]
+    print(h.summary(), "\n")
+    opt = min(optimal_cost(wl, profiles), h.cost)
+    print(f"{'system':<12} {'cost':>8} {'normalized':>11} {'e2e (s)':>9}")
+    for name, p in plans.items():
+        if p.feasible:
+            print(f"{name:<12} {p.cost:8.2f} {p.cost / h.cost:11.3f} {p.e2e_latency:9.3f}")
+        else:
+            print(f"{name:<12} {'infeasible':>8}")
+    print(f"{'optimal':<12} {opt:8.2f} {opt / h.cost:11.3f}")
+
+
+if __name__ == "__main__":
+    main()

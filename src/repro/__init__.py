@@ -1,0 +1,2 @@
+"""repro: Harpagon (INFOCOM'25) serving-cost minimization + JAX/TPU data plane."""
+__version__ = "0.1.0"

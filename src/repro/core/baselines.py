@@ -1,0 +1,98 @@
+"""Baseline systems (Table III) and Harp-* ablations (Sec. IV-C) as planner presets.
+
+Every system in the paper's evaluation is the same three-level composition
+with different choices — which is exactly how the paper frames them:
+
+| system    | L_wc model | #configs | hetero | residual opt | latency split       |
+|-----------|-----------|----------|--------|--------------|---------------------|
+| Harpagon  | d + b/w   | any      | yes    | dummy+reassign | latency-cost eff. |
+| Nexus     | 2d        | 2        | no     | —            | quantized interval  |
+| Scrooge   | d + b/t   | 2        | yes    | —            | throughput-based    |
+| InferLine | 2d        | 1        | yes    | —            | throughput-based    |
+| Clipper   | 2d        | 1        | no     | —            | even splitting      |
+"""
+from __future__ import annotations
+
+from .dispatch import Policy
+from .harpagon import PlannerOptions
+
+# ---------------------------------------------------------------- systems
+HARPAGON = PlannerOptions(name="harpagon")
+
+NEXUS = PlannerOptions(
+    name="nexus",
+    policy=Policy.RR,
+    k_tuples=2,
+    split="quantized",
+    quantize=0.01,
+    use_dummy=False,
+    reassign=0,
+    hardware="cheapest",
+)
+
+SCROOGE = PlannerOptions(
+    name="scrooge",
+    policy=Policy.DT,
+    k_tuples=2,
+    split="throughput",
+    use_dummy=False,
+    reassign=0,
+)
+
+INFERLINE = PlannerOptions(
+    name="inferline",
+    policy=Policy.RR,
+    k_tuples=1,
+    split="throughput",
+    use_dummy=False,
+    reassign=0,
+)
+
+CLIPPER = PlannerOptions(
+    name="clipper",
+    policy=Policy.RR,
+    k_tuples=1,
+    split="even",
+    use_dummy=False,
+    reassign=0,
+    hardware="cheapest",
+)
+
+BASELINES = (NEXUS, SCROOGE, INFERLINE, CLIPPER)
+
+# ---------------------------------------------------------------- ablations
+HARP_2D = PlannerOptions(name="harp-2d", policy=Policy.RR)     # RR dispatch
+HARP_DT = PlannerOptions(name="harp-dt", policy=Policy.DT_OPT)  # literal d + b/t model
+HARP_1C = PlannerOptions(name="harp-1c", k_tuples=1, use_dummy=False, reassign=0)
+HARP_2C = PlannerOptions(name="harp-2c", k_tuples=2, use_dummy=False, reassign=0)
+HARP_NB = PlannerOptions(name="harp-nb", max_batch=1)          # no batching
+HARP_NHC = PlannerOptions(name="harp-nhc", hardware="cheapest")
+HARP_NHE = PlannerOptions(name="harp-nhe", hardware="most_expensive")
+HARP_ND = PlannerOptions(name="harp-nd", use_dummy=False)      # no dummy
+HARP_0RE = PlannerOptions(name="harp-0re", reassign=0)
+HARP_1RE = PlannerOptions(name="harp-1re", reassign=1)
+HARP_TB = PlannerOptions(name="harp-tb", split="throughput")
+HARP_Q001 = PlannerOptions(name="harp-q0.01", split="quantized", quantize=0.01)
+HARP_Q01 = PlannerOptions(name="harp-q0.1", split="quantized", quantize=0.1)
+HARP_NNM = PlannerOptions(name="harp-nnm", node_merge=False)
+HARP_NCD = PlannerOptions(name="harp-ncd", cost_direct=False)
+
+ABLATIONS = (
+    HARP_2D,
+    HARP_DT,
+    HARP_1C,
+    HARP_2C,
+    HARP_NB,
+    HARP_NHC,
+    HARP_NHE,
+    HARP_ND,
+    HARP_0RE,
+    HARP_1RE,
+    HARP_TB,
+    HARP_Q001,
+    HARP_Q01,
+    HARP_NNM,
+    HARP_NCD,
+)
+
+ALL_SYSTEMS = (HARPAGON,) + BASELINES

@@ -1,0 +1,145 @@
+"""Application DAGs (series-parallel) and sessions/workloads.
+
+Paper Sec. III-A terminology: a *session* = one DNN-based application
+registration = (DAG of modules, per-module request rate, end-to-end latency
+objective).  We represent DAGs as series-parallel (SP) trees — every paper
+workload (traffic/face/pose/caption/actdet pipelines) is series-parallel —
+which both the latency-splitting heuristics and the exact Pareto-DP brute
+force exploit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Mapping, Union
+
+SP = Union["Leaf", "Series", "Par"]
+
+
+@dataclass(frozen=True)
+class Leaf:
+    name: str
+
+
+@dataclass(frozen=True)
+class Series:
+    parts: tuple[SP, ...]
+
+
+@dataclass(frozen=True)
+class Par:
+    parts: tuple[SP, ...]
+
+
+def series(*parts: SP) -> Series:
+    return Series(tuple(parts))
+
+
+def par(*parts: SP) -> Par:
+    return Par(tuple(parts))
+
+
+def _leaves(sp: SP) -> list[str]:
+    if isinstance(sp, Leaf):
+        return [sp.name]
+    out: list[str] = []
+    for p in sp.parts:
+        out.extend(_leaves(p))
+    return out
+
+
+def _sources(sp: SP) -> list[str]:
+    if isinstance(sp, Leaf):
+        return [sp.name]
+    if isinstance(sp, Series):
+        return _sources(sp.parts[0])
+    return [s for p in sp.parts for s in _sources(p)]
+
+
+def _sinks(sp: SP) -> list[str]:
+    if isinstance(sp, Leaf):
+        return [sp.name]
+    if isinstance(sp, Series):
+        return _sinks(sp.parts[-1])
+    return [s for p in sp.parts for s in _sinks(p)]
+
+
+def _edges(sp: SP) -> list[tuple[str, str]]:
+    if isinstance(sp, Leaf):
+        return []
+    out: list[tuple[str, str]] = []
+    for p in sp.parts:
+        out.extend(_edges(p))
+    if isinstance(sp, Series):
+        for a, b in zip(sp.parts, sp.parts[1:]):
+            for u in _sinks(a):
+                for v in _sources(b):
+                    out.append((u, v))
+    return out
+
+
+def sp_latency(sp: SP, weight: Mapping[str, float] | Callable[[str], float]) -> float:
+    """End-to-end (longest-path) latency with per-module weights."""
+    w = weight if callable(weight) else weight.__getitem__
+    if isinstance(sp, Leaf):
+        return w(sp.name)
+    if isinstance(sp, Series):
+        return sum(sp_latency(p, weight) for p in sp.parts)
+    return max(sp_latency(p, weight) for p in sp.parts)
+
+
+def sp_depth(sp: SP) -> int:
+    """Number of modules on the longest chain (for Clipper's even split)."""
+    if isinstance(sp, Leaf):
+        return 1
+    if isinstance(sp, Series):
+        return sum(sp_depth(p) for p in sp.parts)
+    return max(sp_depth(p) for p in sp.parts)
+
+
+@dataclass(frozen=True)
+class AppDAG:
+    name: str
+    sp: SP
+    modules: tuple[str, ...] = field(default=())
+
+    def __post_init__(self):
+        object.__setattr__(self, "modules", tuple(_leaves(self.sp)))
+
+    @property
+    def edges(self) -> list[tuple[str, str]]:
+        return _edges(self.sp)
+
+    def parents(self, m: str) -> frozenset[str]:
+        return frozenset(u for u, v in self.edges if v == m)
+
+    def children(self, m: str) -> frozenset[str]:
+        return frozenset(v for u, v in self.edges if u == m)
+
+    def sibling_groups(self) -> list[tuple[str, ...]]:
+        """Module groups sharing the same parents AND children (node merger)."""
+        buckets: dict[tuple[frozenset, frozenset], list[str]] = {}
+        for m in self.modules:
+            buckets.setdefault((self.parents(m), self.children(m)), []).append(m)
+        return [tuple(v) for v in buckets.values() if len(v) > 1]
+
+    def latency(self, weights: Mapping[str, float]) -> float:
+        return sp_latency(self.sp, weights)
+
+    @property
+    def depth(self) -> int:
+        return sp_depth(self.sp)
+
+
+@dataclass(frozen=True)
+class Workload:
+    """One session: an app DAG, per-module request rates, and a latency SLO."""
+
+    app: AppDAG
+    rates: Mapping[str, float]
+    slo: float
+    tag: str = ""
+
+    def __post_init__(self):
+        missing = set(self.app.modules) - set(self.rates)
+        if missing:
+            raise ValueError(f"rates missing for modules {missing}")

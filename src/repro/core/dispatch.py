@@ -1,0 +1,212 @@
+"""Request dispatching: worst-case-latency (L_wc) models and the TC dispatcher.
+
+Paper Sec. III-B.  Three dispatch policies:
+
+* ``TC``  (Harpagon, Theorem 1): batched requests are handed to machines in
+  descending throughput-cost-ratio order, so machine *i* collects its batch at
+  its *remaining workload* rate ``w_i = sum_{r_j <= r_i} f_j``:
+  ``L_wc(i) = d_i + b_i / w_i``.
+* ``RR``  (Nexus/InferLine/Clipper): individual requests round-robin'ed; a
+  full-capacity machine collects at its own throughput (``b/t = d``), giving
+  ``L_wc = 2 d``; a partially-loaded machine (rate ``f < t``) collects at
+  ``f``: ``L_wc = d + b / f``.
+* ``DT``  (Scrooge): frontend forms batches and paces each machine at its
+  configuration throughput, ``L_wc = d + b / t = 2 d`` for every machine
+  (optimistic for partial machines; Table III row "Scrooge").
+
+``dispatch_trace`` realizes TC/RR dispatching request-by-request; the
+event-driven simulator (`repro.serving.simulator`) uses it to validate
+Theorem 1 empirically.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass
+
+from .profiles import Config
+
+_EPS = 1e-9
+
+
+class Policy(enum.Enum):
+    TC = "tc"  # throughput-cost batched dispatch (Harpagon)
+    RR = "rr"  # round-robin individual dispatch (Nexus/InferLine/Clipper)
+    DT = "dt"  # machine-throughput-paced dispatch (Scrooge), sound on partials
+    DT_OPT = "dt_opt"  # Table III "d + b/t" taken literally (Harp-dt ablation)
+
+
+@dataclass(frozen=True)
+class Alloc:
+    """``machines`` (possibly fractional tail) running ``config``, serving ``rate`` req/s.
+
+    ``dummy`` is phantom request rate injected by the frontend (dummy
+    generator / dummy-filled residual): it raises the batch-collection rate
+    (and the machine count paid for) without carrying real traffic.
+    """
+
+    config: Config
+    machines: float
+    rate: float  # real request rate (machines * throughput - dummy)
+    dummy: float = 0.0
+
+    @property
+    def cost(self) -> float:
+        """Frame-rate-proportional cost: p * (f + dummy) / t == p * machines."""
+        return self.config.unit_price * self.machines
+
+    @property
+    def full(self) -> bool:
+        return self.machines >= 1.0 - 1e-12
+
+    @property
+    def collect_rate(self) -> float:
+        return self.rate + self.dummy
+
+    @property
+    def eff_ratio(self) -> float:
+        """Dispatch rank: dummy-filled machines are always dispatched last
+        (their padded stream feeds the collection of everything above)."""
+        return -math.inf if self.dummy > _EPS else self.config.ratio
+
+    def __repr__(self) -> str:
+        dm = f"+{self.dummy:.3g}dum" if self.dummy else ""
+        return f"{self.rate:.6g}{dm} ({self.machines:.3g} x b{self.config.batch}@{self.config.hardware})"
+
+
+def total_cost(allocs: list[Alloc]) -> float:
+    return sum(a.cost for a in allocs)
+
+
+def total_rate(allocs: list[Alloc]) -> float:
+    return sum(a.rate for a in allocs)
+
+
+def config_wcl(
+    config: Config, policy: Policy, *, collect_rate: float, full: bool = True
+) -> float:
+    """Worst-case latency of ONE machine at ``config``.
+
+    ``collect_rate`` is the rate at which this machine's batch fills up:
+    * TC: the remaining workload ``w`` (Theorem 1),
+    * RR full machine: its own throughput; RR partial: its assigned rate,
+    * DT: its own throughput always.
+    """
+    d, b = config.duration, config.batch
+    if policy is Policy.DT_OPT:
+        return d + b / config.throughput  # == 2d, optimistic on partials
+    if policy in (Policy.RR, Policy.DT) and full:
+        return 2.0 * d  # RR: local collection at own throughput; DT: d + b/t
+    if collect_rate <= _EPS:
+        return math.inf
+    return d + b / collect_rate
+
+
+def module_wcl(allocs: list[Alloc], policy: Policy) -> float:
+    """Worst-case latency of a module = max over its machines (Theorem 1)."""
+    if not allocs:
+        return 0.0
+    worst = 0.0
+    for a in allocs:
+        if a.rate <= _EPS:
+            continue
+        if policy is Policy.TC:
+            # remaining workload: every alloc ranked at-or-below this one
+            # (dummy traffic counts towards batch collection; dummy-filled
+            # machines rank last)
+            w = sum(
+                x.collect_rate
+                for x in allocs
+                if x.eff_ratio <= a.eff_ratio + _EPS
+            )
+            if a.dummy > _EPS:
+                w = max(w, a.collect_rate)
+            lat = config_wcl(a.config, policy, collect_rate=w)
+        elif policy in (Policy.RR, Policy.DT):
+            # the tail machine of a fractional alloc collects at its own rate
+            frac = a.machines - math.floor(a.machines)
+            lat = config_wcl(a.config, policy, collect_rate=a.config.throughput)
+            if frac > 1e-12:
+                tail_rate = frac * a.config.throughput + a.dummy
+                lat = max(
+                    lat,
+                    config_wcl(
+                        a.config, policy, collect_rate=tail_rate, full=False
+                    ),
+                )
+        else:  # DT_OPT: d + b/t for every machine
+            lat = config_wcl(a.config, policy, collect_rate=a.config.throughput)
+        worst = max(worst, lat)
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# Request-level dispatch traces (ground truth for the event simulator).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Machine:
+    """A concrete machine instance in a dispatch plan."""
+
+    mid: int
+    config: Config
+    rate: float  # assigned request rate (== throughput if at full capacity)
+
+
+def expand_machines(allocs: list[Alloc]) -> list[Machine]:
+    """Expand allocations to individual machines, ratio-descending order."""
+    machines: list[Machine] = []
+    mid = 0
+    for a in sorted(allocs, key=lambda x: -x.eff_ratio):
+        n_full = math.floor(a.machines + 1e-12)
+        for _ in range(n_full):
+            machines.append(Machine(mid, a.config, a.config.throughput))
+            mid += 1
+        frac = a.machines - n_full
+        if frac > 1e-9:
+            machines.append(Machine(mid, a.config, frac * a.config.throughput))
+            mid += 1
+    return machines
+
+
+def dispatch_trace(
+    machines: list[Machine], n_requests: int, policy: Policy
+) -> list[tuple[int, int]]:
+    """Assign request ids 0..n-1 to machines: returns [(req_id, machine_id)].
+
+    TC: consecutive runs of ``batch`` requests per machine, walking machines in
+    throughput-cost order (machines of equal ratio take turns batch-by-batch).
+    RR: individual requests round-robin, weighted by assigned rate (each
+    machine receives requests at a rate equal to its share of the workload).
+    """
+    out: list[tuple[int, int]] = []
+    if policy is Policy.TC:
+        # Weighted fair batch scheduling: machine i receives one batch every
+        # b_i / f_i time units; ties are broken by throughput-cost ratio
+        # (matching Fig. 4: req1-6 -> A, req7-12 -> B, req13-16 -> C).
+        next_t = [0.0] * len(machines)
+        rid = 0
+        while rid < n_requests:
+            j = min(
+                range(len(machines)),
+                key=lambda i: (next_t[i], -machines[i].config.ratio, i),
+            )
+            m = machines[j]
+            take = min(m.config.batch, n_requests - rid)
+            for _ in range(take):
+                out.append((rid, m.mid))
+                rid += 1
+            next_t[j] += m.config.batch / m.rate
+        return out
+    # RR / DT: weighted round-robin of individual requests (deficit counter).
+    credit = [0.0] * len(machines)
+    tot = sum(m.rate for m in machines)
+    for rid in range(n_requests):
+        for i, m in enumerate(machines):
+            credit[i] += m.rate / tot
+        # give the request to the machine with the largest credit
+        j = max(range(len(machines)), key=lambda i: credit[i])
+        credit[j] -= 1.0
+        out.append((rid, machines[j].mid))
+    return out

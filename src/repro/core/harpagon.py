@@ -1,0 +1,241 @@
+"""The Harpagon planner: dispatch model ∘ latency splitting ∘ module scheduling.
+
+``Planner`` composes the three levels of the paper (Fig. 3):
+
+1. pick the dispatch policy (which fixes every L_wc estimate),
+2. split the end-to-end SLO into per-module budgets (Sec. III-D),
+3. schedule each module with Algorithm 1 + residual optimizers (Sec. III-C),
+4. reassign leftover end-to-end latency to residual workloads (Sec. III-C).
+
+Every baseline system and every Harp-* ablation of the paper is an options
+preset over the same composition (see `repro.core.baselines`).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field, replace
+from typing import Mapping
+
+from .dag import Workload
+from .dispatch import Policy
+from .profiles import ModuleProfile
+from .residual import ModuleSchedule, apply_reassign, schedule_module
+from . import splitter as sp
+
+_EPS = 1e-9
+
+
+@dataclass(frozen=True)
+class PlannerOptions:
+    name: str = "harpagon"
+    policy: Policy = Policy.TC
+    k_tuples: int | None = None          # None = multi-tuple (Algorithm 1)
+    split: str = "lc"                    # lc | throughput | even | quantized
+    quantize: float = 0.01               # interval for split="quantized"
+    node_merge: bool = True
+    cost_direct: bool = True
+    use_dummy: bool = True
+    reassign: int = 10 ** 6              # max reassigner iterations (0 / 1 / many)
+    hardware: str | None = None          # None=all, "cheapest", "most_expensive"
+    max_batch: int | None = None         # 1 => batching disabled (Harp-nb)
+
+
+@dataclass(frozen=True)
+class Plan:
+    workload: Workload
+    options: PlannerOptions
+    schedules: Mapping[str, ModuleSchedule]
+    feasible: bool
+    runtime_s: float
+
+    @property
+    def cost(self) -> float:
+        if not self.feasible:
+            return math.inf
+        return sum(s.cost for s in self.schedules.values())
+
+    @property
+    def e2e_latency(self) -> float:
+        if not self.feasible:
+            return math.inf
+        return self.workload.app.latency({m: s.wcl for m, s in self.schedules.items()})
+
+    def summary(self) -> str:
+        lines = [
+            f"plan[{self.options.name}] app={self.workload.app.name} slo={self.workload.slo}"
+            f" feasible={self.feasible} cost={self.cost:.4g} e2e={self.e2e_latency:.4g}"
+            f" runtime={self.runtime_s * 1e3:.2f}ms"
+        ]
+        for m, s in self.schedules.items():
+            dummy = f" dummy={s.dummy:.3g}" if s.dummy else ""
+            lines.append(
+                f"  {m}: rate={s.rate:.4g}{dummy} budget={s.budget:.4g} "
+                f"wcl={s.wcl:.4g} cost={s.cost:.4g} allocs={list(s.allocs)}"
+            )
+        return "\n".join(lines)
+
+
+_INFEASIBLE = object()
+
+
+class Planner:
+    def __init__(self, options: PlannerOptions | None = None):
+        self.options = options or PlannerOptions()
+
+    # -- profile preparation -------------------------------------------------
+    def _profiles(
+        self, profiles: Mapping[str, ModuleProfile]
+    ) -> Mapping[str, ModuleProfile] | None:
+        o = self.options
+        out = {}
+        for m, p in profiles.items():
+            hw = None
+            if o.hardware == "cheapest":
+                hw = [p.cheapest_hardware()]
+            elif o.hardware == "most_expensive":
+                hw = [p.most_expensive_hardware()]
+            p = p.restrict(max_batch=o.max_batch, hardware=hw)
+            if not p.configs:
+                return None
+            out[m] = p
+        return out
+
+    # -- splitting ------------------------------------------------------------
+    def _split_with(
+        self, wl: Workload, profiles: Mapping[str, ModuleProfile], split: str
+    ) -> dict[str, float] | None:
+        o = self.options
+        if split in ("lc", "lc_int"):
+            return sp.split_lc(
+                wl,
+                profiles,
+                o.policy,
+                node_merge=o.node_merge,
+                cost_direct=o.cost_direct,
+                integer_tails=split == "lc_int",
+            )
+        if split == "throughput":
+            return sp.split_throughput(wl, profiles, o.policy)
+        if split in ("even", "even_int"):
+            return sp.split_even(
+                wl, profiles, o.policy, integer_tails=split == "even_int"
+            )
+        if split == "quantized":
+            return sp.split_quantized(wl, profiles, o.policy, q=o.quantize)
+        raise ValueError(f"unknown splitter {split}")
+
+    # -- full pipeline ---------------------------------------------------------
+    def plan(self, wl: Workload, profiles: Mapping[str, ModuleProfile]) -> Plan:
+        """Split -> schedule -> residual-optimize.
+
+        Per the paper (Fig. 3) the module scheduler and latency splitter
+        iterate: when the LC split's fractionally-tight budgets turn out to
+        be integer-unschedulable, Harpagon retries with progressively looser
+        splitting strategies and keeps the cheapest feasible plan.
+        """
+        t0 = time.perf_counter()
+        o = self.options
+        best: Plan | None = None
+        cascade = [o.split]
+        if o.split == "lc":
+            # schedule-aware refinement (paper Fig. 3's scheduler<->splitter
+            # iteration): looser heuristics + integer-tail-aware budgets
+            cascade += ["throughput", "lc_int", "even_int"]
+        for split in cascade:
+            plan = self._plan_with_split(wl, profiles, split, t0)
+            if plan.feasible and (best is None or plan.cost < best.cost - 1e-12):
+                best = plan
+        if best is not None:
+            return best
+        return Plan(wl, o, {}, False, time.perf_counter() - t0)
+
+    def _plan_with_split(
+        self,
+        wl: Workload,
+        profiles: Mapping[str, ModuleProfile],
+        split: str,
+        t0: float,
+    ) -> Plan:
+        o = self.options
+        restricted = self._profiles(profiles)
+        if restricted is None:
+            return Plan(wl, o, {}, False, time.perf_counter() - t0)
+        budgets = self._split_with(wl, restricted, split)
+        if budgets is None:
+            return Plan(wl, o, {}, False, time.perf_counter() - t0)
+
+        # per-module scheduling (Algorithm 1 / k-tuple variants + dummy)
+        schedules: dict[str, ModuleSchedule] = {}
+        gap = wl.slo - wl.app.latency(budgets)
+        for m in wl.app.modules:
+            s = schedule_module(
+                m,
+                wl.rates[m],
+                budgets[m],
+                restricted[m],
+                o.policy,
+                use_dummy=o.use_dummy and o.k_tuples is None,
+                k_tuples=o.k_tuples,
+            )
+            if s is None and gap > _EPS:
+                # fallback: spend the global slack on this module's budget
+                s = schedule_module(
+                    m,
+                    wl.rates[m],
+                    budgets[m] + gap,
+                    restricted[m],
+                    o.policy,
+                    use_dummy=o.use_dummy and o.k_tuples is None,
+                    k_tuples=o.k_tuples,
+                )
+                if s is not None:
+                    gap = max(0.0, gap - max(0.0, s.wcl - budgets[m]))
+            if s is None:
+                return Plan(wl, o, {}, False, time.perf_counter() - t0)
+            schedules[m] = s
+
+        # latency reassigner: hand the remaining end-to-end gap to residuals
+        if o.reassign > 0 and o.k_tuples is None:
+            self._reassign(wl, restricted, schedules)
+
+        e2e = wl.app.latency({m: s.wcl for m, s in schedules.items()})
+        feasible = e2e <= wl.slo + 1e-6
+        return Plan(wl, o, schedules, feasible, time.perf_counter() - t0)
+
+    def _reassign(
+        self,
+        wl: Workload,
+        profiles: Mapping[str, ModuleProfile],
+        schedules: dict[str, ModuleSchedule],
+    ) -> None:
+        o = self.options
+        for _ in range(min(o.reassign, 64)):
+            e2e = wl.app.latency({m: s.wcl for m, s in schedules.items()})
+            gap = wl.slo - e2e
+            if gap <= 1e-9:
+                return
+            best: tuple[float, str, ModuleSchedule] | None = None
+            for m, s in schedules.items():
+                new_allocs, _over = apply_reassign(
+                    s.rate + s.dummy, s.budget, gap, profiles[m], list(s.allocs), o.policy
+                )
+                cand = replace(s, allocs=tuple(new_allocs))
+                dcost = s.cost - cand.cost
+                if dcost <= 1e-12:
+                    continue
+                # feasibility: the module's wcl may grow, re-check end-to-end
+                trial = {
+                    k: (cand.wcl if k == m else v.wcl) for k, v in schedules.items()
+                }
+                if wl.app.latency(trial) <= wl.slo + 1e-9 and (
+                    best is None or dcost > best[0]
+                ):
+                    best = (dcost, m, cand)
+            if best is None:
+                return
+            schedules[best[1]] = best[2]
+
+
+def plan(wl: Workload, profiles: Mapping[str, ModuleProfile], options: PlannerOptions | None = None) -> Plan:
+    return Planner(options).plan(wl, profiles)

@@ -1,0 +1,208 @@
+"""Module scheduling: Algorithm 1 (multi-tuple GenerateConfig) + restricted variants.
+
+Given a module's request rate ``T``, latency budget ``L`` and profile ``P``
+(configs ordered by throughput-cost ratio), produce the allocation set.
+
+* ``generate_config``         — paper Algorithm 1 (any number of tuples).
+* ``generate_config_ktuple``  — baseline variant limited to K distinct
+  configurations (K=1: InferLine/Clipper/Harp-1c, K=2: Nexus/Scrooge/Harp-2c).
+
+Feasibility of a configuration at a point in the greedy walk is checked with
+``GetWCL`` under the session's dispatch policy: for TC the batch-collection
+rate is the *current unallocated workload* ``rw`` (which, walking in ratio
+order, equals Theorem 1's remaining workload ``w_i``).
+"""
+from __future__ import annotations
+
+import math
+
+from .dispatch import Alloc, Policy, config_wcl
+from .profiles import Config, ModuleProfile
+
+_EPS = 1e-9
+
+
+def get_wcl(config: Config, policy: Policy, rw: float, *, full: bool) -> float:
+    """L_wc estimate for a machine at ``config`` when ``rw`` workload remains."""
+    if policy is Policy.TC:
+        return config_wcl(config, policy, collect_rate=rw)
+    if policy in (Policy.RR, Policy.DT):
+        # sound model: full machines collect at their own throughput (2d);
+        # partial machines cannot collect faster than their assigned rate.
+        rate = config.throughput if full else rw
+        return config_wcl(config, policy, collect_rate=rate, full=full)
+    return config_wcl(config, policy, collect_rate=config.throughput)  # DT_OPT
+
+
+def _merge(allocs: list[Alloc]) -> list[Alloc]:
+    """Merge adjacent allocations that share a configuration."""
+    out: list[Alloc] = []
+    for a in allocs:
+        if out and out[-1].config == a.config:
+            prev = out.pop()
+            out.append(
+                Alloc(
+                    a.config,
+                    prev.machines + a.machines,
+                    prev.rate + a.rate,
+                    prev.dummy + a.dummy,
+                )
+            )
+        else:
+            out.append(a)
+    return out
+
+
+def generate_config(
+    T: float,
+    L: float,
+    profile: ModuleProfile,
+    policy: Policy = Policy.TC,
+) -> tuple[bool, list[Alloc]]:
+    """Paper Algorithm 1: greedy multi-tuple configuration generation."""
+    if T <= _EPS:
+        return True, []
+    rw = T
+    allocs: list[Alloc] = []
+    k = 0
+    configs = profile.configs  # ratio-descending
+    if not configs:
+        return False, []
+    c = configs[k]
+    while rw > _EPS:
+        n = rw / c.throughput
+        full = n >= 1.0 - 1e-12
+        if get_wcl(c, policy, rw, full=full) <= L + _EPS:
+            if full:
+                nfull = math.floor(n + 1e-12)
+                allocs.append(Alloc(c, float(nfull), nfull * c.throughput))
+                rw -= nfull * c.throughput
+                if rw < _EPS:
+                    rw = 0.0
+                # loop re-checks the same c against the smaller rw
+            else:
+                allocs.append(Alloc(c, n, rw))
+                rw = 0.0
+        else:
+            k += 1
+            if k >= len(configs):
+                # No configuration can serve the residual fractionally (a tiny
+                # rate cannot even fill a batch of 1 within the budget).  Fall
+                # back to DUMMY-FILLING one machine: the frontend pads the
+                # residual to a full machine's throughput, so the batch
+                # collects at rate t (L_wc = 2d) at the price of one machine.
+                fill = _dummy_fill(rw, L, configs, policy)
+                if fill is None:
+                    return False, []
+                allocs.append(fill)
+                rw = 0.0
+                break
+            c = configs[k]
+    return True, _merge(allocs)
+
+
+def _dummy_fill(rw: float, L: float, configs, policy: Policy) -> Alloc | None:
+    """Cheapest single machine that can carry ``rw`` when padded with dummies."""
+    best = None
+    for c in configs:
+        if c.throughput < rw - _EPS:
+            continue
+        if get_wcl(c, policy, c.throughput, full=True) > L + _EPS:
+            continue
+        if best is None or c.unit_price < best.unit_price:
+            best = c
+    if best is None:
+        return None
+    return Alloc(best, 1.0, rw, dummy=best.throughput - rw)
+
+
+def _cover_with_config(
+    c: Config,
+    rate: float,
+    L: float,
+    policy: Policy,
+    *,
+    collect_rate: float,
+    allow_dummy: bool,
+) -> list[Alloc] | None:
+    """Serve ``rate`` entirely with machines at ``c`` within ``L``, or None.
+
+    With ``allow_dummy`` the fractional tail machine may be dummy-filled when
+    its own rate cannot collect a batch in time (prior systems' early-exec /
+    over-provisioned residual machine — still one machine's price).
+    """
+    nfull = math.floor(rate / c.throughput + 1e-12)
+    frac_rate = rate - nfull * c.throughput
+    if nfull > 0 and get_wcl(c, policy, collect_rate, full=True) > L + _EPS:
+        return None
+    out = []
+    if nfull > 0:
+        out.append(Alloc(c, float(nfull), nfull * c.throughput))
+    if frac_rate > _EPS:
+        if get_wcl(c, policy, frac_rate, full=False) <= L + _EPS:
+            out.append(Alloc(c, frac_rate / c.throughput, frac_rate))
+        elif allow_dummy and get_wcl(c, policy, c.throughput, full=True) <= L + _EPS:
+            out.append(Alloc(c, 1.0, frac_rate, dummy=c.throughput - frac_rate))
+        else:
+            return None
+    return out
+
+
+def _cover_residual(
+    configs, rate: float, L: float, policy: Policy, *, collect_rate: float
+) -> list[Alloc] | None:
+    """Fractional coverage by the best-ratio config first; dummy-fill last."""
+    for allow_dummy in (False, True):
+        for c in configs:
+            cover = _cover_with_config(
+                c, rate, L, policy, collect_rate=collect_rate, allow_dummy=allow_dummy
+            )
+            if cover is not None:
+                return cover
+    return None
+
+
+def generate_config_ktuple(
+    T: float,
+    L: float,
+    profile: ModuleProfile,
+    policy: Policy,
+    k_tuples: int,
+) -> tuple[bool, list[Alloc]]:
+    """K-restricted scheduling used by prior systems.
+
+    K=1: one configuration must carry the whole workload (incl. its fractional
+    tail machine).  K=2: best-ratio feasible config for the majority
+    (``floor(T/t)`` full machines), then ONE further config for the residual.
+    """
+    if T <= _EPS:
+        return True, []
+    configs = profile.configs
+    if k_tuples <= 1:
+        for allow_dummy in (False, True):
+            for c in configs:
+                cover = _cover_with_config(
+                    c, T, L, policy, collect_rate=T, allow_dummy=allow_dummy
+                )
+                if cover is not None:
+                    return True, _merge(cover)
+        return False, []
+    # K == 2 (the paper's two-tuple <c_opt, c_res>): greedy two-round heuristic
+    # of prior systems — first feasible (max-ratio) majority config, then the
+    # first config that can carry the residual including its tail machine.
+    for c in configs:
+        if get_wcl(c, policy, T, full=True) > L + _EPS:
+            continue
+        nfull = math.floor(T / c.throughput + 1e-12)
+        allocs = []
+        res = T
+        if nfull >= 1:
+            allocs.append(Alloc(c, float(nfull), nfull * c.throughput))
+            res = T - nfull * c.throughput
+        if res <= _EPS:
+            return True, _merge(allocs)
+        cover = _cover_residual(configs, res, L, policy, collect_rate=res)
+        if cover is not None:
+            return True, _merge(allocs + cover)
+        # greedy majority left an infeasible residual: try next majority config
+    return False, []

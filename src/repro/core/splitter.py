@@ -1,0 +1,364 @@
+"""Latency splitting: Algorithm 2 (latency-cost efficiency) + optimizers + baselines.
+
+Paper Sec. III-D.  During splitting each module is represented by a single
+*split configuration* ``c``; its fractional-packing cost is
+``C_M(c) = p_c * T_M / t_c`` and its latency contribution is
+``GetWCL(c) = d + b / T_M`` under TC dispatch (the whole module rate is the
+batch-collection rate for the majority machines).
+
+Splitters implemented:
+
+* ``split_lc``          — Algorithm 2: greedy max latency-cost efficiency
+                          ``LC = dCost / dL_wc``; optional *node merger*
+                          (sibling joint upgrades) and *cost-direct* (re-do
+                          the last R iterations greedily by raw cost delta).
+* ``split_throughput``  — Scrooge/InferLine-style: greedy by throughput.
+* ``split_even``        — Clipper-style: ``L / depth`` per module.
+* ``split_quantized``   — Nexus-style: exact DP over a discretized budget
+                          grid on the SP tree (interval ``q``).
+
+Each returns ``{module: budget}`` — the per-module latency budget handed to
+the module scheduler — and is feasible by construction
+(``critical-path latency <= SLO``) or ``None`` when even the least-demanding
+configuration cannot meet the SLO.
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping
+
+from .dag import AppDAG, Leaf, Par, Series, SP, Workload
+from .dispatch import Policy
+from .profiles import Config, ModuleProfile
+from .scheduler import get_wcl
+
+_EPS = 1e-9
+INF = math.inf
+
+
+def split_cost(c: Config, T: float) -> float:
+    """Fractional-packing cost of carrying rate T entirely on configuration c."""
+    return c.unit_price * T / c.throughput
+
+
+def split_wcl(c: Config, T: float, policy: Policy) -> float:
+    """Module-level L_wc when the whole rate T rides configuration c
+    (fractional-packing view: the tail machine is ignored)."""
+    return get_wcl(c, policy, T, full=T >= c.throughput - _EPS)
+
+
+def split_wcl_integer(c: Config, T: float, policy: Policy) -> float:
+    """Integer-aware L_wc: accounts for the fractional tail machine, which
+    either collects at its own small rate or is dummy-filled to a full
+    machine (L_wc = 2d).  Budgets derived from this are schedulable by
+    construction (the single-config integer cover fits)."""
+    t = c.throughput
+    if T < t - _EPS:
+        # single partial machine — or dummy-filled if collection is too slow
+        return min(get_wcl(c, policy, T, full=False), get_wcl(c, policy, t, full=True))
+    full = get_wcl(c, policy, T, full=True)
+    tail = T - math.floor(T / t + 1e-12) * t
+    if tail <= _EPS:
+        return full
+    tail_wcl = min(
+        get_wcl(c, policy, tail, full=False), get_wcl(c, policy, t, full=True)
+    )
+    return max(full, tail_wcl)
+
+
+class _State:
+    """Mutable Algorithm-2 state: one split config per module."""
+
+    def __init__(
+        self,
+        wl: Workload,
+        profiles: Mapping[str, ModuleProfile],
+        policy: Policy,
+        *,
+        integer_tails: bool = False,
+    ):
+        self.wl = wl
+        self.profiles = profiles
+        self.policy = policy
+        self.integer_tails = integer_tails
+        self._wcl_fn = split_wcl_integer if integer_tails else split_wcl
+        # Start at the least cost-efficient / lowest-latency configuration
+        # (paper: batch 1 on the priciest hardware).  We pick the minimum-WCL
+        # config (tie: highest unit price) so that the start is feasible
+        # whenever any single-config assignment is.
+        self.cfg: dict[str, Config] = {
+            m: min(
+                profiles[m].configs,
+                key=lambda c: (self._wcl_fn(c, wl.rates[m], policy), -c.unit_price),
+            )
+            for m in wl.app.modules
+        }
+
+    def wcl(self, m: str, c: Config | None = None) -> float:
+        return self._wcl_fn(c or self.cfg[m], self.wl.rates[m], self.policy)
+
+    def cost(self, m: str, c: Config | None = None) -> float:
+        return split_cost(c or self.cfg[m], self.wl.rates[m])
+
+    def e2e(self, override: Mapping[str, Config] | None = None) -> float:
+        def w(m: str) -> float:
+            c = override.get(m) if override else None
+            return self.wcl(m, c or self.cfg[m])
+
+        return self.wl.app.latency({m: w(m) for m in self.wl.app.modules})
+
+    def total_cost(self) -> float:
+        return sum(self.cost(m) for m in self.wl.app.modules)
+
+    def feasible(self) -> bool:
+        return self.e2e() <= self.wl.slo + _EPS
+
+    def budgets(self) -> dict[str, float]:
+        return {m: self.wcl(m) for m in self.wl.app.modules}
+
+
+def _candidates(st: _State, m: str) -> list[tuple[float, float, Config]]:
+    """Cost-reducing upgrade candidates for module m: (dcost, dlat, config)."""
+    out = []
+    prev = st.cfg[m]
+    c_prev, l_prev = st.cost(m), st.wcl(m)
+    for c in st.profiles[m].configs:
+        if c == prev:
+            continue
+        dcost = c_prev - st.cost(m, c)
+        if dcost <= 1e-12:
+            continue
+        dlat = st.wcl(m, c) - l_prev
+        out.append((dcost, dlat, c))
+    return out
+
+
+def _lc(dcost: float, dlat: float) -> float:
+    """Latency-cost efficiency; free (non-latency-increasing) moves rank first."""
+    return INF if dlat <= _EPS else dcost / dlat
+
+
+def split_lc(
+    wl: Workload,
+    profiles: Mapping[str, ModuleProfile],
+    policy: Policy = Policy.TC,
+    *,
+    node_merge: bool = True,
+    cost_direct: bool = True,
+    cost_direct_r: tuple[int, ...] = (1, 2, 3),
+    integer_tails: bool = False,
+) -> dict[str, float] | None:
+    """Algorithm 2 + node merger + cost-direct.  Returns per-module budgets."""
+    st = _State(wl, profiles, policy, integer_tails=integer_tails)
+    if not st.feasible():
+        return None
+    groups = wl.app.sibling_groups() if node_merge else []
+    history: list[dict[str, tuple[Config, Config]]] = []
+
+    def step_lc() -> bool:
+        """One Algorithm-2 iteration: apply the max-LC feasible operation."""
+        best: tuple[float, float, dict[str, Config]] | None = None  # (lc, dcost, move)
+        for m in wl.app.modules:
+            for dcost, dlat, c in _candidates(st, m):
+                move = {m: c}
+                key = (_lc(dcost, dlat), dcost)
+                if (best is None or key > (best[0], best[1])) and st.e2e(move) <= wl.slo + _EPS:
+                    best = (key[0], dcost, move)
+        # node merger: joint upgrade of sibling groups, LC summed
+        for grp in groups:
+            move: dict[str, Config] = {}
+            dcost_sum, dlat_max = 0.0, 0.0
+            for m in grp:
+                cands = _candidates(st, m)
+                if not cands:
+                    continue
+                dcost, dlat, c = max(cands, key=lambda x: _lc(x[0], x[1]))
+                move[m] = c
+                dcost_sum += dcost
+                dlat_max = max(dlat_max, dlat)
+            if len(move) < 2:
+                continue
+            key = (_lc(dcost_sum, dlat_max), dcost_sum)
+            if (best is None or key > (best[0], best[1])) and st.e2e(move) <= wl.slo + _EPS:
+                best = (key[0], dcost_sum, move)
+        if best is None:
+            return False
+        record = {m: (st.cfg[m], c) for m, c in best[2].items()}
+        st.cfg.update(best[2])
+        history.append(record)
+        return True
+
+    while step_lc():
+        pass
+
+    if cost_direct and history:
+        best_cfg = dict(st.cfg)
+        best_cost = st.total_cost()
+        for r in cost_direct_r:
+            if r > len(history):
+                continue
+            # roll back the final r operations
+            trial = _State(wl, profiles, policy, integer_tails=integer_tails)
+            trial.cfg = dict(st.cfg)
+            for record in reversed(history[-r:]):
+                for m, (old, _new) in record.items():
+                    trial.cfg[m] = old
+            # greedy by raw cost delta
+            while True:
+                best_mv: tuple[float, dict[str, Config]] | None = None
+                for m in wl.app.modules:
+                    for dcost, _dlat, c in _candidates(trial, m):
+                        if (best_mv is None or dcost > best_mv[0]) and trial.e2e(
+                            {m: c}
+                        ) <= wl.slo + _EPS:
+                            best_mv = (dcost, {m: c})
+                if best_mv is None:
+                    break
+                trial.cfg.update(best_mv[1])
+            if trial.total_cost() < best_cost - 1e-12:
+                best_cost = trial.total_cost()
+                best_cfg = dict(trial.cfg)
+        st.cfg = best_cfg
+
+    return st.budgets()
+
+
+def split_throughput(
+    wl: Workload,
+    profiles: Mapping[str, ModuleProfile],
+    policy: Policy = Policy.TC,
+) -> dict[str, float] | None:
+    """Scrooge/InferLine-style: greedily upgrade whichever module gains the
+    highest throughput, ignoring latency-budget efficiency."""
+    st = _State(wl, profiles, policy)
+    if not st.feasible():
+        return None
+    while True:
+        best: tuple[tuple[float, float], dict[str, Config]] | None = None
+        for m in wl.app.modules:
+            for dcost, _dlat, c in _candidates(st, m):
+                key = (c.throughput, dcost)
+                if (best is None or key > best[0]) and st.e2e({m: c}) <= wl.slo + _EPS:
+                    best = (key, {m: c})
+        if best is None:
+            break
+        st.cfg.update(best[1])
+    return st.budgets()
+
+
+def split_even(
+    wl: Workload,
+    profiles: Mapping[str, ModuleProfile],
+    policy: Policy = Policy.RR,
+    *,
+    integer_tails: bool = False,
+) -> dict[str, float] | None:
+    """Clipper-style: every module gets SLO / depth."""
+    wf = split_wcl_integer if integer_tails else split_wcl
+    per = wl.slo / wl.app.depth
+    budgets = {}
+    for m in wl.app.modules:
+        feas = [
+            c
+            for c in profiles[m].configs
+            if wf(c, wl.rates[m], policy) <= per + _EPS
+        ]
+        if not feas:
+            return None
+        budgets[m] = per
+    return budgets
+
+
+def _sp_quantized_dp(
+    sp: SP, nq: int, q: float, cost_at: Mapping[str, list[float]]
+) -> list[float]:
+    """min-cost DP over the SP tree: dp[k] = min cost with latency <= k*q."""
+    if isinstance(sp, Leaf):
+        return cost_at[sp.name]
+    if isinstance(sp, Series):
+        dp = _sp_quantized_dp(sp.parts[0], nq, q, cost_at)
+        for p in sp.parts[1:]:
+            nxt = _sp_quantized_dp(p, nq, q, cost_at)
+            out = [INF] * (nq + 1)
+            # dp and nxt are monotone non-increasing in k; combine minimally.
+            for a in range(nq + 1):
+                if dp[a] is INF:
+                    continue
+                for b in range(nq + 1 - a):
+                    v = dp[a] + nxt[b]
+                    if v < out[a + b]:
+                        out[a + b] = v
+            # prefix-min to enforce monotonicity
+            for k in range(1, nq + 1):
+                out[k] = min(out[k], out[k - 1])
+            dp = out
+        return dp
+    # Par: same budget for every branch
+    parts = [_sp_quantized_dp(p, nq, q, cost_at) for p in sp.parts]
+    return [sum(p[k] for p in parts) for k in range(nq + 1)]
+
+
+def _sp_quantized_assign(
+    sp: SP, k: int, nq: int, q: float, cost_at: Mapping[str, list[float]]
+) -> dict[str, float]:
+    """Recover per-module budgets from the DP solution with total budget k*q."""
+    if isinstance(sp, Leaf):
+        return {sp.name: k * q}
+    if isinstance(sp, Par):
+        out: dict[str, float] = {}
+        for p in sp.parts:
+            out.update(_sp_quantized_assign(p, k, nq, q, cost_at))
+        return out
+    # Series: re-run the pairwise combination tracking the split point
+    tails = [_sp_quantized_dp(Series(sp.parts[i:]), nq, q, cost_at) for i in range(len(sp.parts))]
+    out = {}
+    rem = k
+    for i, p in enumerate(sp.parts):
+        head = _sp_quantized_dp(p, nq, q, cost_at)
+        if i == len(sp.parts) - 1:
+            out.update(_sp_quantized_assign(p, rem, nq, q, cost_at))
+            break
+        tail = tails[i + 1]
+        best_a, best_v = 0, INF
+        for a in range(rem + 1):
+            v = head[a] + tail[rem - a]
+            if v < best_v - 1e-15:
+                best_v, best_a = v, a
+        out.update(_sp_quantized_assign(p, best_a, nq, q, cost_at))
+        rem -= best_a
+    return out
+
+
+def split_quantized(
+    wl: Workload,
+    profiles: Mapping[str, ModuleProfile],
+    policy: Policy = Policy.TC,
+    q: float = 0.01,
+) -> dict[str, float] | None:
+    """Nexus-style: exact DP over budgets quantized to multiples of ``q``."""
+    nq = int(wl.slo / q)
+    if nq < 1:
+        return None
+    cost_at: dict[str, list[float]] = {}
+    for m in wl.app.modules:
+        T = wl.rates[m]
+        per = [INF] * (nq + 1)
+        for c in profiles[m].configs:
+            lw = split_wcl(c, T, policy)
+            k0 = math.ceil(lw / q - 1e-9)
+            if k0 > nq:
+                continue
+            cst = split_cost(c, T)
+            for k in range(k0, nq + 1):
+                if cst < per[k]:
+                    per[k] = cst
+        cost_at[m] = per
+    dp = _sp_quantized_dp(wl.app.sp, nq, q, cost_at)
+    if dp[nq] is INF or dp[nq] == INF:
+        return None
+    budgets = _sp_quantized_assign(wl.app.sp, nq, nq, q, cost_at)
+    # guard: every module must have at least one feasible config at its budget
+    for m, b in budgets.items():
+        if cost_at[m][min(nq, int(b / q))] == INF:
+            return None
+    return budgets

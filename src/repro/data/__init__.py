@@ -1,0 +1,3 @@
+from .pipeline import BigramStream, lm_batches
+
+__all__ = ["BigramStream", "lm_batches"]

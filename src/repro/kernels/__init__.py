@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (+ pure-jnp oracles in ref.py, dispatch in ops.py).
+
+Each kernel: <name>.py holds the pl.pallas_call with explicit BlockSpec VMEM
+tiling; ref.py the semantics of record; ops.py the jit'd model-facing wrapper
+that picks kernel vs oracle per backend.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,137 @@
+"""Pallas TPU chunkwise-parallel mLSTM (xLSTM matrix-memory cell).
+
+TPU adaptation of the recurrent matrix-memory update: the sequence is split
+into chunks; within a chunk the stabilized exponential-gating attention runs
+in parallel (two (C, C) / (C, D) matmuls — MXU work), while the (D, D)
+matrix state, the (D,) normalizer and the scalar stabilizer are carried
+across chunks in VMEM scratch.  Grid = (B * H, L / C) with the chunk axis
+sequential.
+
+Oracle: `repro.kernels.ref.mlstm_chunked` (full-parallel stabilized form).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,  # (1, C, D)
+    k_ref,
+    v_ref,
+    li_ref,  # (1, C) log input gate
+    lf_ref,  # (1, C) log forget gate (log-sigmoid applied)
+    o_ref,  # (1, C, D)
+    state_ref,  # VMEM (D, D) f32
+    n_ref,  # VMEM (1, D) f32
+    m_ref,  # VMEM (1, 1) f32
+    *,
+    c: int,
+    scale: float,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[:] = jnp.zeros_like(state_ref)
+        n_ref[:] = jnp.zeros_like(n_ref)
+        m_ref[:] = jnp.full_like(m_ref, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (C, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    li = li_ref[0].astype(jnp.float32)  # (C,)
+    lf = lf_ref[0].astype(jnp.float32)
+    m_in = m_ref[0, 0]
+    C_in = state_ref[:]
+    n_in = n_ref[0]
+
+    F = jnp.cumsum(lf)  # (C,) cumulative log forget within chunk
+    # stabilizer per step: max(inter, intra)
+    #   inter_t = m_in + F_t;   intra_t = max_{s<=t}(F_t - F_s + i_s)
+    logw = F[:, None] - F[None, :] + li[None, :]  # (C, C) log intra weights
+    tri = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1) <= jax.lax.broadcasted_iota(
+        jnp.int32, (c, c), 0
+    )
+    logw = jnp.where(tri, logw, NEG_INF)
+    intra_max = jnp.max(logw, axis=1)  # (C,)
+    m_t = jnp.maximum(m_in + F, intra_max)  # (C,)
+
+    w = jnp.exp(logw - m_t[:, None])  # (C, C)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, C)
+    inter_scale = jnp.exp(m_in + F - m_t)  # (C,)
+    qC = jax.lax.dot_general(
+        q, C_in, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, D)
+    num = inter_scale[:, None] * qC + jax.lax.dot_general(
+        scores * w, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    qn = jnp.sum(q * n_in[None, :], axis=1)  # (C,)
+    den = inter_scale * qn + jnp.sum(scores * w, axis=1)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    o_ref[0] = (num / den[:, None]).astype(o_ref.dtype)
+
+    # ---- carry the state across the chunk boundary
+    F_C = F[-1]
+    decay = F_C - F + li  # (C,) log weight of step s in the outgoing state
+    m_out = jnp.maximum(m_in + F_C, jnp.max(decay))
+    w_out = jnp.exp(decay - m_out)  # (C,)
+    kw = k * w_out[:, None]  # (C, D)
+    state_ref[:] = jnp.exp(m_in + F_C - m_out) * C_in + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    n_ref[0] = jnp.exp(m_in + F_C - m_out) * n_in + jnp.sum(kw, axis=0)
+    m_ref[0, 0] = m_out
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def chunked_mlstm(
+    q: jax.Array,  # (B, L, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    i_gate: jax.Array,  # (B, L, H) log input gate
+    f_gate: jax.Array,  # (B, L, H) log forget gate
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, L, H, D = q.shape
+    c = min(chunk, L)
+    assert L % c == 0, (L, c)
+    nc = L // c
+    scale = D ** -0.5
+
+    tr = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, L, D)
+    trg = lambda g: g.transpose(0, 2, 1).reshape(B * H, L)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, c=c, scale=scale),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, D), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, c, D), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, c, D), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, c), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, c), lambda bh, ci: (bh, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, c, D), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, L, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((D, D), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tr(q), tr(k), tr(v), trg(i_gate), trg(f_gate))
+    return out.reshape(B, H, L, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,251 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics of record: Pallas kernels are validated against these
+in interpret mode across shape/dtype sweeps, and CPU execution (smoke tests,
+examples) runs them directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6, gemma: bool = False) -> jax.Array:
+    """RMSNorm; ``gemma=True`` uses the (1 + w) parameterization."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if gemma else w.astype(jnp.float32)
+    return (y * scale).astype(dtype)
+
+
+def _mask(
+    q_len: int, k_len: int, *, causal: bool, window: int | None, q_offset: int = 0
+) -> jax.Array:
+    """(q_len, k_len) boolean attention mask.
+
+    ``q_offset`` is the absolute position of query row 0 (for prefill the
+    query block starts at 0; for masked decode it is the cache length).
+    """
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(k_len)[None, :]
+    m = jnp.ones((q_len, k_len), dtype=bool)
+    if causal:
+        m &= kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m
+
+
+def attention(
+    q: jax.Array,  # (B, Sq, Hq, Dk)
+    k: jax.Array,  # (B, Sk, Hkv, Dk)
+    v: jax.Array,  # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+    kv_len: jax.Array | None = None,  # (B,) valid cache lengths, for decode
+) -> jax.Array:
+    """Grouped-query attention oracle.  Returns (B, Sq, Hq, Dv).
+
+    Supports distinct key/value head dims (needed by MLA-absorbed decode) and
+    an optional per-batch valid KV length for cache attention.
+    """
+    B, Sq, Hq, Dk = q.shape
+    _, Sk, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    g = Hq // Hkv
+    scale = scale if scale is not None else Dk ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, Dk)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    mask = _mask(Sq, Sk, causal=causal, window=window, q_offset=q_offset)
+    if kv_len is not None:
+        valid = jnp.arange(Sk)[None, :] < kv_len[:, None]  # (B, Sk)
+        mask = mask[None] & valid[:, None, :]
+        mask = mask[:, None, None]  # (B,1,1,Sq,Sk)
+    else:
+        mask = mask[None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,  # (B, Sq, Hq, Dk)
+    k: jax.Array,  # (B, Sk, Hkv, Dk)
+    v: jax.Array,  # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks (flash-style, jnp only).
+
+    Never materializes the (Sq, Sk) logits — O(Sq * chunk) working set —
+    so long-context prefill neither blows HBM nor forces the SPMD
+    partitioner into resharding a quadratic tensor.
+    """
+    B, Sq, Hq, Dk = q.shape
+    _, Sk, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else Dk ** -0.5
+    C = min(chunk, Sk)
+    assert Sk % C == 0, (Sk, C)
+    nC = Sk // C
+    # keep q/k/v in their native (bf16) dtype and accumulate in f32 — the
+    # same contract as the TPU flash kernel; halves the streamed KV bytes
+    qf = q.reshape(B, Sq, Hkv, g, Dk)
+    kc = k.reshape(B, nC, C, Hkv, Dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nC, C, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(Sq)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        ci, kb, vb = xs  # (B, C, Hkv, D*)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qf, kb, preferred_element_type=jnp.float32
+        ) * scale
+        kpos = ci * C + jnp.arange(C)
+        mask = jnp.ones((Sq, C), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(v.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, Hkv, g, Sq, Dv), jnp.float32)
+    m0 = jnp.full((B, Hkv, g, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.arange(nC), kc, vc)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, Hkv, g, Sq, Dv)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, Hq, Dk) — one new token per sequence
+    k_cache: jax.Array,  # (B, S, Hkv, Dk)
+    v_cache: jax.Array,  # (B, S, Hkv, Dv)
+    lengths: jax.Array,  # (B,) number of valid cache entries (incl. this token)
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-step cache attention oracle.  Returns (B, Hq, Dv)."""
+    B, Hq, Dk = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    Dv = v_cache.shape[-1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else Dk ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, Dk)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qf, kf) * scale
+    pos = jnp.arange(S)[None, :]
+    valid = pos < lengths[:, None]
+    if window is not None:
+        valid &= pos > (lengths[:, None] - 1 - window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(B, Hq, Dv).astype(q.dtype)
+
+
+def ssm_scan(
+    a: jax.Array,  # (B, L, D, N) discretized decay  exp(dt * A)
+    bx: jax.Array,  # (B, L, D, N) discretized input  dt * B * x
+    h0: jax.Array | None = None,  # (B, D, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Linear recurrence h_t = a_t * h_{t-1} + bx_t (selective-SSM core).
+
+    Returns (h all steps (B, L, D, N), final state (B, D, N)).
+    """
+    B, L, D, N = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), a.dtype)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = a_s * h0[:, None] + b_s
+    return h, h[:, -1]
+
+
+def selective_scan(
+    x: jax.Array,  # (B, L, D)
+    dt: jax.Array,  # (B, L, D)
+    A: jax.Array,  # (D, N)
+    Bm: jax.Array,  # (B, L, N)
+    Cm: jax.Array,  # (B, L, N)
+    h0: jax.Array | None = None,  # (B, N, D) transposed state layout
+) -> tuple[jax.Array, jax.Array]:
+    """Fused Mamba selective-scan oracle: y = C . scan(exp(dt A), dt B x).
+
+    Returns (y (B, L, D), h_last (B, N, D)).
+    """
+    B, L, D = x.shape
+    N = A.shape[1]
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf[..., None] * A.astype(jnp.float32))  # (B, L, D, N)
+    bx = (dtf * x.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[..., None, :]
+    h0_dn = None if h0 is None else jnp.swapaxes(h0, 1, 2)  # (B, D, N)
+    hs, h_last = ssm_scan(a, bx, h0_dn)
+    y = jnp.einsum("bldn,bln->bld", hs, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), jnp.swapaxes(h_last, 1, 2)
+
+
+def mlstm_chunked(
+    q: jax.Array,  # (B, L, H, D)
+    k: jax.Array,  # (B, L, H, D)
+    v: jax.Array,  # (B, L, H, D)
+    i_gate: jax.Array,  # (B, L, H) log input gate (pre-exp)
+    f_gate: jax.Array,  # (B, L, H) log forget gate (log sigmoid applied)
+    *,
+    chunk: int = 64,
+) -> jax.Array:
+    """mLSTM parallel form oracle (full quadratic; the kernel is chunked).
+
+    Stabilized exponential gating as in the xLSTM paper: with cumulative log
+    forget F_t = sum_{s<=t} logf_s, the unnormalized weight of (t, s) is
+    exp(F_t - F_s + i_s - m_t) where m_t is the running max for stability.
+    """
+    B, L, H, D = q.shape
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    lf = f_gate.astype(jnp.float32)
+    li = i_gate.astype(jnp.float32)
+    F = jnp.cumsum(lf, axis=1)  # (B, L, H)
+    # log weight matrix  Dmat[t, s] = F_t - F_s + i_s  (s <= t)
+    logw = F[:, :, None] - F[:, None, :] + li[:, None, :]  # (B, L, L, H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    logw = jnp.where(tri[None, :, :, None], logw, NEG_INF)
+    m = jnp.max(logw, axis=2, keepdims=True)  # (B, L, 1, H)
+    w = jnp.exp(logw - m)
+    scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * (D ** -0.5)
+    num = jnp.einsum("btsh,btsh,bshd->bthd", scores, w, vf)
+    den = jnp.abs(jnp.einsum("btsh,btsh->bth", scores, w))
+    den = jnp.maximum(den, jnp.exp(-m[:, :, 0, :]))  # xLSTM max(|n|, exp(-m))
+    return (num / den[..., None]).astype(q.dtype)

@@ -1,0 +1,63 @@
+"""Pallas TPU fused RMSNorm: one HBM round-trip per row block.
+
+Grid over row blocks; each step loads a (BR, D) tile into VMEM, reduces the
+mean-square in f32 on the VPU and writes the scaled tile back — avoiding the
+separate square/mean/rsqrt/mul HLO ops (4x HBM traffic) of the naive form.
+
+Oracle: `repro.kernels.ref.rmsnorm`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float, gemma: bool):
+    x = x_ref[:].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = w_ref[:].astype(jnp.float32)
+    scale = 1.0 + w if gemma else w
+    o_ref[:] = (y * scale[None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "gemma", "block_rows", "interpret"))
+def fused_rmsnorm(
+    x: jax.Array,  # (..., D)
+    w: jax.Array,  # (D,)
+    *,
+    eps: float = 1e-6,
+    gemma: bool = False,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    shape = x.shape
+    D = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    xr = x.reshape(rows, D)
+    br = min(block_rows, rows)
+    # pad rows to a multiple of the block
+    pad = (-rows) % br
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps, gemma=gemma),
+        grid=((rows + pad) // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(((rows + pad), D), x.dtype),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(xr, w)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

@@ -1,0 +1,5 @@
+# NOTE: do not import .dryrun here — it mutates XLA_FLAGS on import and must
+# only be used as a dedicated entrypoint (python -m repro.launch.dryrun).
+from .mesh import dp_axes, make_debug_mesh, make_production_mesh, model_axis
+
+__all__ = ["dp_axes", "make_debug_mesh", "make_production_mesh", "model_axis"]

@@ -1,0 +1,47 @@
+"""Production meshes: 16x16 (one pod, 256 chips) and 2x16x16 (two pods).
+
+Functions, not module-level constants, so importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, tp: int = 16):
+    """Physical pods are fixed (256 chips each); the LOGICAL (data, model)
+    factorization is per-model: small dense models want less tensor
+    parallelism (fewer TP all-reduces) and more data parallelism."""
+    assert 256 % tp == 0, tp
+    dp = 256 // tp
+    shape = (2, dp, tp) if multi_pod else (dp, tp)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — the dry-run entrypoint must "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import"
+        )
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for tests (requires a matching host-device override)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a production mesh ('pod' included if present)."""
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

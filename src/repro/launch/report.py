@@ -1,0 +1,110 @@
+"""Assemble EXPERIMENTS.md roofline/dry-run tables from experiments/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirpath: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 1e12:
+        return f"{b/1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}MB"
+    return f"{b/1e3:.0f}KB"
+
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def roofline_table(recs: list[dict], mesh: str) -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    out = [
+        "| arch | shape | status | compute (s) | memory (s) | collective (s) | "
+        "dominant | useful ratio | HBM/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            note = r.get("reason", r.get("error", ""))[:80]
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['status']} | — | — | — | — | — | — | {note} |"
+            )
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        hbm = fmt_bytes(mem.get("total_bytes", 0) / max(1, rl["chips"]))
+        ur = r.get("useful_ratio")
+        ur_s = f"{ur:.2f}" if ur else "—"
+        note = r.get("variant", "")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {rl['compute_s']:.4f} | "
+            f"{rl['memory_s']:.4f} | {rl['collective_s']:.4f} | **{rl['dominant']}** | "
+            f"{ur_s} | {hbm} | {note} |"
+        )
+    return "\n".join(out)
+
+
+def dryrun_summary(recs: list[dict], mesh: str) -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    err = [r for r in rows if r["status"] == "error"]
+    lines = [f"- mesh `{mesh}`: **{ok} ok**, {len(skipped)} skipped, {len(err)} errors"]
+    for r in skipped:
+        lines.append(f"  - skipped {r['arch']} x {r['shape']}: {r['reason'][:120]}")
+    for r in err:
+        lines.append(f"  - ERROR {r['arch']} x {r['shape']}: {r['error'][:160]}")
+    return "\n".join(lines)
+
+
+def collective_detail(recs: list[dict], mesh: str) -> str:
+    rows = [r for r in recs if r["mesh"] == mesh and r["status"] == "ok"]
+    rows.sort(key=lambda r: -r["roofline"]["collective_s"])
+    out = ["| arch x shape | collective bytes/dev | by op |", "|---|---|---|"]
+    for r in rows[:10]:
+        ops = ", ".join(
+            f"{k}:{fmt_bytes(v)}" for k, v in sorted(
+                r["collectives"]["bytes_by_op"].items(), key=lambda kv: -kv[1]
+            )
+        )
+        out.append(
+            f"| {r['arch']} x {r['shape']} | "
+            f"{fmt_bytes(r['collectives']['wire_bytes_per_device'])} | {ops} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    for mesh in ("16x16", "2x16x16"):
+        if not any(r["mesh"] == mesh for r in recs):
+            continue
+        print(f"\n### Dry-run summary — mesh {mesh}\n")
+        print(dryrun_summary(recs, mesh))
+        print(f"\n### Roofline — mesh {mesh}\n")
+        print(roofline_table(recs, mesh))
+        print(f"\n### Top collective-bound — mesh {mesh}\n")
+        print(collective_detail(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Serving launcher: plan with Harpagon, then serve batched requests.
+
+Plans a (possibly multi-module) session over the analytic TPU profiles and
+runs the serving engine.  With --real, module executors are real jitted JAX
+forwards of reduced models on CPU; otherwise profiled durations drive an
+event simulation at full scale.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+      --rate 200 --slo 0.5 --requests 2000
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b,qwen1.5-4b \
+      --rate 120 --slo 1.0            # two-module chain
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..core import Leaf, Workload, series
+from ..core.baselines import ALL_SYSTEMS
+from ..core.dag import AppDAG
+from ..core.harpagon import Planner
+from ..models import Model
+from ..profiling import arch_profile
+from ..serving import ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, help="comma-separated chain of archs")
+    ap.add_argument("--rate", type=float, default=100.0)
+    ap.add_argument("--slo", type=float, default=1.0)
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--real", action="store_true", help="execute reduced models on CPU")
+    ap.add_argument("--compare", action="store_true", help="plan with all 5 systems")
+    args = ap.parse_args()
+
+    archs = args.arch.split(",")
+    dag = AppDAG("session", series(*[Leaf(a) for a in archs]))
+    profiles = {a: arch_profile(get_config(a), seq=args.seq) for a in archs}
+    wl = Workload(dag, {a: args.rate for a in archs}, args.slo)
+
+    if args.compare:
+        for opts in ALL_SYSTEMS:
+            plan = Planner(opts).plan(wl, profiles)
+            print(plan.summary())
+        return
+
+    plan = Planner().plan(wl, profiles)
+    print(plan.summary())
+    if not plan.feasible:
+        raise SystemExit("infeasible workload")
+
+    executors = {}
+    if args.real:
+        for a in archs:
+            cfg = get_config(a, smoke=True)
+            model = Model(cfg)
+            params = model.init(jax.random.key(0))
+            fwd = jax.jit(lambda p, t, m=model: m.forward(p, t).logits)
+
+            def ex(b, fwd=fwd, params=params, cfg=cfg):
+                toks = jnp.zeros((b, 32), jnp.int32)
+                fwd(params, toks).block_until_ready()
+
+            ex(1)  # warm the jit cache
+            executors[a] = ex
+
+    engine = ServingEngine(plan, executors=executors)
+    res = engine.run(args.requests, args.rate)
+    print(
+        f"served {len(res.e2e_latencies)} requests: SLO attainment "
+        f"{100 * res.attainment:.2f}%  p99={res.p99:.4f}s  slo={args.slo}s"
+    )
+    for m, st in res.module_stats.items():
+        print(f"  {m}: batches={st.batches} max_latency={st.max_latency:.4f}s")
+
+
+if __name__ == "__main__":
+    main()

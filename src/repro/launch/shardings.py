@@ -1,0 +1,291 @@
+"""Sharding rules: parameter/cache/batch PartitionSpec trees per architecture.
+
+Scheme (DESIGN.md Sec. 5):
+* activations/batch      -> data-parallel axes ('pod', 'data')
+* attention heads / MLP hidden / vocab -> 'model' (Megatron-style via GSPMD)
+* MoE experts            -> flattened EP axes (('data','model') when the
+                            expert count divides, else ('model',)); shard_map
+                            all_to_all routes tokens (models/moe.py)
+* optional FSDP          -> the non-'model' dim of large 2-D weights is
+                            additionally sharded over 'data' (ZeRO-3-style)
+* KV caches              -> batch over dp; kv-heads over 'model' when they
+                            divide, otherwise cache *sequence* over 'model'
+                            (GSPMD partitions the cache attention into
+                            flash-decode-style partial softmax + combine)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, InputShape
+from ..models.moe import MoEMeshInfo
+from .mesh import dp_axes
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def choose_ep_axes(cfg: ArchConfig, mesh) -> tuple[str, ...]:
+    """Flattened mesh axes experts are sharded over: wide EP (data x model)
+    when the expert count divides it (deepseek: 256 over 256), else model-only
+    EP with expert padding (qwen2-moe: 60 -> 64 over 16)."""
+    if not cfg.is_moe_arch:
+        return ()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dm = sizes.get("data", 1) * sizes.get("model", 1)
+    if cfg.n_experts % dm == 0:
+        return ("data", "model")
+    return ("model",)
+
+
+def make_moe_mesh_info(cfg: ArchConfig, mesh, shape: InputShape) -> MoEMeshInfo | None:
+    if not cfg.is_moe_arch or mesh is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ep_axes = choose_ep_axes(cfg, mesh)
+    ep_size = 1
+    for a in ep_axes:
+        ep_size *= sizes[a]
+    token_axes = dp_axes(mesh) + ("model",)
+    token_size = 1
+    for a in token_axes:
+        token_size *= sizes[a]
+    return MoEMeshInfo(
+        ep_axes=ep_axes,
+        ep_size=ep_size,
+        token_axes=token_axes,
+        token_size=token_size,
+        mesh=mesh,
+        all_axes=tuple(mesh.axis_names),
+    )
+
+
+# --------------------------------------------------------------------- params
+_COL = ("q", "k", "v", "q_b", "k_b", "v_b", "w1", "w3", "up",
+        "in_proj", "x_proj", "if_gate", "w", "proj")
+# MLA low-rank down-projections: outputs are small bottlenecks (dc+dr ~ 576)
+# that get sliced/normed before the head up-projection — sharding them makes
+# GSPMD all-gather every layer.  Replicate them; heads shard after q_b/k_b.
+_REPL = ("q_a", "kv_a")
+_ROW = ("o", "w2", "down", "out_proj", "dt_proj")
+
+
+def param_spec(path: str, leaf, cfg: ArchConfig, *, ep_axes, fsdp: bool, ep: int = 1) -> P:
+    parts = path.split("/")
+    name = parts[-1]
+    ctx = parts[-2] if len(parts) > 1 else ""
+    nd = leaf.ndim
+    fs = "data" if fsdp else None
+
+    # expert stacks (..., E_pad, d, f) / (..., E_pad, f, d) — the leading dim
+    # may be a stacked-segment repeats dim, so index from the right and check
+    # that dim -3 really is the (padded) expert count
+    e_pad = -(-cfg.n_experts // max(ep, 1)) * max(ep, 1) if cfg.is_moe_arch else -1
+    if (
+        ctx == "ffn"
+        and name in ("w1", "w2", "w3")
+        and nd >= 3
+        and leaf.shape[-3] == e_pad
+    ):
+        return P(*([None] * (nd - 3) + [ep_axes if ep_axes else None, None, None]))
+    if name == "router":
+        return P(*([None] * nd))
+    if ctx.endswith("norm") or ctx in ("qn", "kn"):  # norm scales: replicated
+        return P(*([None] * nd))
+    if ctx in _REPL:
+        return P(*([None] * nd))
+    if ctx == "embed" and name == "w":
+        return P(*([None] * (nd - 2) + ["model", fs]))
+    if ctx == "head" and name == "w":
+        return P(*([None] * (nd - 2) + [fs, "model"]))
+    if ctx == "r":  # slstm recurrent (H, Dh, 4Dh) — heads over model
+        return P(*([None] * (nd - 3) + ["model", None, None]))
+    if name == "b":  # biases follow their matrix's output dim
+        if ctx in _ROW:
+            return P(*([None] * nd))
+        return P(*([None] * (nd - 1) + ["model"]))
+    if name == "conv_w":  # depthwise conv (K, di): channels over model
+        return P(*([None] * (nd - 1) + ["model"]))
+    if name in ("conv_b", "D"):
+        return P(*([None] * (nd - 1) + ["model"]))
+    if name == "A_log":  # (di, N)
+        return P(*([None] * (nd - 2) + ["model", None]))
+    if ctx in _COL or name in _COL:
+        if nd >= 2:
+            return P(*([None] * (nd - 2) + [fs, "model"]))
+    if ctx in _ROW or name in _ROW:
+        if nd >= 2:
+            return P(*([None] * (nd - 2) + ["model", fs]))
+    if name == "w" and nd >= 2:  # generic dense (treat as column)
+        return P(*([None] * (nd - 2) + [fs, "model"]))
+    return P(*([None] * nd))  # norms, scalars: replicated
+
+
+def _mamba_gn_fix(path: str, spec: P, leaf) -> P:
+    # groupnorm scales over the inner dim (model-sharded channels)
+    if path.endswith("gn/w"):
+        return P(*([None] * (leaf.ndim - 1) + ["model"]))
+    return spec
+
+
+def divisibility_fix(spec: P, leaf, sizes: dict[str, int]) -> P:
+    """Drop sharding on any dim the mesh axes do not divide."""
+    entries = list(spec)
+    for i, ax in enumerate(entries):
+        if ax is None:
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        tot = 1
+        for a in axs:
+            tot *= sizes.get(a, 1)
+        if leaf.shape[i] % tot != 0:
+            entries[i] = None
+    return P(*entries)
+
+
+def param_specs(
+    params_shape: Any,
+    cfg: ArchConfig,
+    *,
+    ep_axes=(),
+    fsdp: bool = False,
+    mesh=None,
+    ep: int = 1,
+):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else {}
+
+    def f(path, leaf):
+        s = _path_str(path)
+        spec = param_spec(s, leaf, cfg, ep_axes=ep_axes, fsdp=fsdp, ep=ep)
+        spec = _mamba_gn_fix(s, spec, leaf)
+        # param_spec indexes dims from the right, so stacked segment params
+        # (leading repeats dim) need no shifting; finally guard divisibility.
+        if sizes:
+            spec = divisibility_fix(spec, leaf, sizes)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+# --------------------------------------------------------------------- caches
+def cache_specs(cache_shape: Any, cfg: ArchConfig, mesh, shape: InputShape):
+    """Batch over dp when divisible; kv-heads or sequence over 'model'."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= sizes[a]
+    msize = sizes.get("model", 1)
+    batch_ax = dp if shape.global_batch % dp_size == 0 else (
+        ("data",) if shape.global_batch % sizes.get("data", 1) == 0 else None
+    )
+
+    def f(path, leaf):
+        s = _path_str(path)
+        nd = leaf.ndim
+        name = s.split("/")[-1] if "/" in s else s
+        # leading dims may include a stacked segment dim; index from the right
+        if s.endswith("k") or s.endswith("v"):  # (..., B, S, Hkv, Dh)
+            hkv = leaf.shape[-2]
+            seq_spec = None
+            head_spec = "model" if hkv % msize == 0 else None
+            if head_spec is None and leaf.shape[-3] % msize == 0:
+                seq_spec = "model"
+            return P(*([None] * (nd - 4) + [batch_ax, seq_spec, head_spec, None]))
+        if s.endswith("ckv") or s.endswith("kr"):  # (..., B, S, dc)
+            seq_spec = "model" if leaf.shape[-2] % msize == 0 else None
+            return P(*([None] * (nd - 3) + [batch_ax, seq_spec, None]))
+        if s.endswith("conv"):  # (..., B, K-1, di)
+            return P(*([None] * (nd - 3) + [batch_ax, None, "model"]))
+        if s.endswith("h"):  # mamba (..., B, N, D) / slstm h (B, H, Dh)
+            return P(*([None] * (nd - 3) + [batch_ax, None, "model"]))
+        if s.endswith("C"):  # mlstm (..., B, H, Dk, Dv)
+            return P(*([None] * (nd - 4) + [batch_ax, "model", None, None]))
+        if s.endswith("n") or s.endswith("c"):  # (..., B, H, Dh)
+            return P(*([None] * (nd - 3) + [batch_ax, "model", None]))
+        if s.endswith("m"):  # (..., B, H)
+            return P(*([None] * (nd - 2) + [batch_ax, "model"]))
+        return P(*([None] * nd))
+
+    def fix(spec: P, leaf) -> P:
+        # guard: any sharded entry must divide the dim
+        entries = list(spec)
+        for i, ax in enumerate(entries):
+            if ax is None:
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            tot = 1
+            for a in axs:
+                tot *= sizes.get(a, 1)
+            if leaf.shape[i] % tot != 0:
+                entries[i] = None
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(lambda p, l: fix(f(p, l), l), cache_shape)
+
+
+def optimizer_specs(p_specs: Any, params_shape: Any, mesh, *, min_size: int = 1 << 20):
+    """ZeRO-1 optimizer-state sharding: Adam moments of large weights get one
+    extra 'data'-sharded dim (weights themselves stay replicated over data —
+    sharding weight dims over the batch axis makes GSPMD reshard activations
+    instead of gathering weights)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsize = sizes.get("data", 1)
+
+    def f(spec: P, leaf) -> P:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if n < min_size:
+            return spec
+        # a mesh axis may appear at most once per spec (expert weights
+        # already consume 'data' via wide EP)
+        used = set()
+        for ax in spec:
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                if a is not None:
+                    used.add(a)
+        if "data" in used:
+            return spec
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, ax in enumerate(entries):
+            if ax is None and leaf.shape[i] % dsize == 0:
+                entries[i] = "data"
+                return P(*entries)
+        return spec
+
+    return jax.tree.map(f, p_specs, params_shape, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(shape: InputShape, cfg: ArchConfig, mesh) -> dict[str, P]:
+    dp = dp_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_size = 1
+    for a in dp:
+        dp_size *= sizes[a]
+    b_ax = dp if shape.global_batch % dp_size == 0 else (
+        ("data",) if shape.global_batch % sizes.get("data", 1) == 0 else None
+    )
+    out = {"tokens": P(b_ax, None), "labels": P(b_ax, None)}
+    if cfg.input_mode == "embeds":
+        out["embeds"] = P(b_ax, None, None)
+    return out
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,127 @@
+"""ShapeDtypeStruct input specs + jitted step functions per (arch x shape).
+
+Nothing here allocates device memory: parameters, optimizer state and KV
+caches are `jax.eval_shape` stand-ins; the dry-run lowers/compiles only.
+
+Step kinds:
+* train   — loss (CE + MoE aux + MTP) -> grads -> AdamW update
+* prefill — forward S tokens, emit last-token logits + populated KV cache
+* decode  — one token against a seq_len KV cache (cache donated)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, InputShape
+from ..models import Model
+from ..training.loop import make_loss_fn
+from ..training.optimizer import OptConfig, adamw_init, adamw_update
+
+# archs that need a sliding-window variant to run long_500k (DESIGN.md Sec. 4)
+WINDOW_OVERRIDE = {
+    "smollm-360m": 8192,
+    "gemma-7b": 8192,
+    "qwen1.5-4b": 8192,
+    "qwen2-moe-a2.7b": 8192,
+    "qwen2-vl-2b": 8192,
+}
+# (arch, shape) pairs that are skipped, with the reason recorded
+SKIPS = {
+    ("musicgen-medium", "long_500k"): "524k EnCodec frames ~ 3h audio; outside "
+    "the model's 30s regime — windowing is musically meaningless (DESIGN.md 4)",
+}
+
+
+def effective_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Apply long-context variants; raises KeyError on skipped pairs."""
+    if (cfg.name, shape.name) in SKIPS:
+        raise KeyError(SKIPS[(cfg.name, shape.name)])
+    if shape.name == "long_500k" and cfg.name in WINDOW_OVERRIDE:
+        return cfg.with_sliding_window(WINDOW_OVERRIDE[cfg.name])
+    return cfg
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, model: Model | None = None) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every step input (weak-type-correct)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.input_mode == "embeds":
+            return {
+                "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.dtype(cfg.compute_dtype)),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if shape.kind == "prefill":
+        if cfg.input_mode == "embeds":
+            return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.dtype(cfg.compute_dtype))}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token + cache of seq_len
+    model = model or Model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache": cache,
+        "idx": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def params_shape(model: Model) -> Any:
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def opt_state_shape(params_sh: Any) -> Any:
+    return jax.eval_shape(adamw_init, params_sh)
+
+
+# ------------------------------------------------------------------- steps
+def make_train_fn(model: Model, opt_cfg: OptConfig | None = None):
+    opt_cfg = opt_cfg or OptConfig()
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_fn(model: Model, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+
+    def prefill_step(params, batch):
+        cache = model.init_cache(B, S)
+        out = model.forward(
+            params,
+            batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            cache=cache,
+            idx=0,
+            compute_logits=False,
+            return_hidden=True,
+        )
+        # serving: only the last position's logits are needed — unembedding
+        # all S positions wastes V x d matmul + a huge logits materialization
+        logits = model.unembed(params, out.hidden[:, -1:])
+        return logits[:, 0], out.cache
+
+    return prefill_step
+
+
+def make_decode_fn(model: Model):
+    def decode_step(params, batch):
+        out = model.forward(
+            params, batch["tokens"], cache=batch["cache"], idx=batch["idx"]
+        )
+        return out.logits[:, 0], out.cache
+
+    return decode_step

@@ -1,0 +1,4 @@
+from .model import Model, ModelOutput, segmentize
+from .moe import MoEMeshInfo
+
+__all__ = ["Model", "ModelOutput", "MoEMeshInfo", "segmentize"]

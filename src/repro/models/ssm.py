@@ -1,0 +1,282 @@
+"""State-space / recurrent mixers: Mamba (Jamba) and xLSTM (mLSTM + sLSTM).
+
+TPU adaptation (DESIGN.md Sec. 3): the selective scan is expressed as an
+associative linear recurrence (`kernels.ops.ssm_scan`) rather than a CUDA
+sequential kernel; the mLSTM uses the chunkwise-parallel matrix-memory form
+(MXU-friendly) instead of warp-level primitives; the sLSTM is a lax.scan —
+inherently sequential, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels import ops
+from .layers import Params, _dense_init, dense
+
+
+# ------------------------------------------------------------------- Mamba
+def mamba_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.d_state
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": _dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _dense_init(ks[2], di, dt_rank + 2 * N, dtype),
+        "dt_proj": _dense_init(ks[3], dt_rank, di, dtype, bias=True),
+        "A_log": jnp.log(A),  # fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], di, d, dtype),
+    }
+
+
+def mamba_cache_init(cfg: ArchConfig, batch: int, dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, cfg.d_state, di), jnp.float32),  # (B, N, D) layout
+    }
+
+
+def _mamba_ssm_inputs(p: Params, cfg: ArchConfig, x: jax.Array):
+    """x: (B, L, di) post-conv activations -> (dt, A, B, C) for the recurrence."""
+    N = cfg.d_state
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    proj = dense(p["x_proj"], x)
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt).astype(jnp.float32))  # (B, L, di)
+    A = -jnp.exp(p["A_log"])  # (di, N)
+    return dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def mamba_forward(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, L, d)
+    *,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    B, L, d = x.shape
+    di = cfg.ssm_expand * d
+    xz = dense(p["in_proj"], x)
+    xm, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv1d
+    K = p["conv_w"].shape[0]
+    if cache is not None:
+        ctx = jnp.concatenate([cache["conv"].astype(xm.dtype), xm], axis=1)
+    else:
+        ctx = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
+    win = jnp.stack([ctx[:, i : i + L] for i in range(K)], axis=0)  # (K, B, L, di)
+    xc = jnp.einsum("kbld,kd->bld", win.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32)).astype(xm.dtype)
+
+    dt, A, Bm, Cm = _mamba_ssm_inputs(p, cfg, xc)
+    h0 = cache["h"] if cache is not None else None
+    if L == 1 and cache is not None:  # single-step decode: h is (B, N, D)
+        a = jnp.exp(dt[:, 0][:, None, :] * A.T[None])  # (B, N, D)
+        bx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[:, None, :] * Bm[:, 0][..., None]
+        h = a * cache["h"] + bx
+        y = jnp.einsum("bnd,bn->bd", h, Cm[:, 0])[:, None]
+        h_last = h
+    else:
+        y, h_last = ops.selective_scan(xc, dt, A, Bm, Cm, h0)
+        y = y.astype(jnp.float32)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": ctx[:, -(K - 1) :].astype(cache["conv"].dtype), "h": h_last}
+    return out, new_cache
+
+
+# ------------------------------------------------------------------- mLSTM
+def mlstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": _dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "q": _dense_init(ks[2], di, di, dtype),
+        "k": _dense_init(ks[3], di, di, dtype),
+        "v": _dense_init(ks[4], di, di, dtype),
+        "if_gate": _dense_init(ks[5], di, 2 * H, dtype, bias=True),
+        "gn": {"w": jnp.ones((di,), dtype)},  # per-head groupnorm scale
+        "down": _dense_init(ks[6], di, d, dtype),
+    }
+
+
+def mlstm_cache_init(cfg: ArchConfig, batch: int, dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    Dh = di // H
+    return {
+        "conv": jnp.zeros((batch, 3, di), dtype),
+        "C": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        "n": jnp.zeros((batch, H, Dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def _headify(x: jax.Array, H: int) -> jax.Array:
+    B, L, di = x.shape
+    return x.reshape(B, L, H, di // H)
+
+
+def _groupnorm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Per-head RMS-style normalization; x: (B, L, H, Dh)."""
+    B, L, H, Dh = x.shape
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + 1e-6)
+    return (y.reshape(B, L, H * Dh) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlstm_forward(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    *,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    B, L, d = x.shape
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    Dh = di // H
+    xz = dense(p["up"], x)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    K = p["conv_w"].shape[0]
+    if cache is not None:
+        ctx = jnp.concatenate([cache["conv"].astype(xm.dtype), xm], axis=1)
+    else:
+        ctx = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
+    win = jnp.stack([ctx[:, i : i + L] for i in range(K)], axis=0)
+    xc = jnp.einsum("kbld,kd->bld", win.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32)).astype(xm.dtype)
+
+    q = _headify(dense(p["q"], xc), H)
+    k = _headify(dense(p["k"], xc), H)
+    v = _headify(dense(p["v"], xm), H)
+    gif = dense(p["if_gate"], xc).astype(jnp.float32)
+    li = gif[..., :H]  # log input gate (pre-exp)
+    lf = jax.nn.log_sigmoid(gif[..., H:])  # log forget gate
+
+    new_cache = None
+    if L == 1 and cache is not None:
+        m_prev, C_prev, n_prev = cache["m"], cache["C"], cache["n"]
+        li0, lf0 = li[:, 0], lf[:, 0]
+        m_new = jnp.maximum(lf0 + m_prev, li0)
+        i_s = jnp.exp(li0 - m_new)[..., None]
+        f_s = jnp.exp(lf0 + m_prev - m_new)[..., None]
+        kf = k[:, 0].astype(jnp.float32) * (Dh ** -0.5)
+        vf = v[:, 0].astype(jnp.float32)
+        C = f_s[..., None] * C_prev + i_s[..., None] * kf[..., :, None] * vf[..., None, :]
+        n = f_s * n_prev + i_s * kf
+        qf = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhd,bhdv->bhv", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+        y = (num / den[..., None]).astype(x.dtype)[:, None]  # (B, 1, H, Dh)
+        new_cache = {"conv": ctx[:, -(K - 1) :].astype(cache["conv"].dtype), "C": C, "n": n, "m": m_new}
+    else:
+        y = ops.mlstm(q, k, v, li, lf)
+        if cache is not None:
+            # rebuild the terminal recurrent state for subsequent decode
+            kf = k.astype(jnp.float32) * (Dh ** -0.5)
+            vf = v.astype(jnp.float32)
+            F = jnp.cumsum(lf, axis=1)
+            m_new = jnp.max(F[:, -1:, :] - F + li, axis=1)  # (B, H)
+            wlog = F[:, -1:, :] - F + li - m_new[:, None]
+            w = jnp.exp(wlog)  # (B, L, H)
+            C = jnp.einsum("blh,blhd,blhv->bhdv", w, kf, vf)
+            n = jnp.einsum("blh,blhd->bhd", w, kf)
+            new_cache = {
+                "conv": ctx[:, -(K - 1) :].astype(cache["conv"].dtype),
+                "C": C,
+                "n": n,
+                "m": m_new,
+            }
+    y = _groupnorm(y, p["gn"]["w"])
+    out = dense(p["down"], y * jax.nn.silu(z))
+    return out, new_cache
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    Dh = d // H
+    ks = jax.random.split(key, 4)
+    dff = -(-(d * 4 // 3) // 8) * 8  # ~4/3 expansion, rounded up to multiple of 8
+    return {
+        "w": _dense_init(ks[0], d, 4 * d, dtype, bias=True),  # i f z o from input
+        "r": (jax.random.normal(ks[1], (H, Dh, 4 * Dh)) * (Dh ** -0.5)).astype(dtype),
+        "gn": {"w": jnp.ones((d,), dtype)},
+        "up": _dense_init(ks[2], d, 2 * dff, dtype),
+        "down": _dense_init(ks[3], dff, d, dtype),
+    }
+
+
+def slstm_cache_init(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    Dh = d // H
+    z = lambda: jnp.zeros((batch, H, Dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+def _slstm_step(p: Params, cfg: ArchConfig, state, wx_t):
+    """One sLSTM step.  wx_t: (B, 4d) precomputed input contribution."""
+    H = cfg.n_heads
+    d = cfg.d_model
+    Dh = d // H
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    rh = jnp.einsum("bhd,hdk->bhk", h, p["r"].astype(jnp.float32))  # (B, H, 4Dh)
+    g = wx_t.reshape(-1, H, 4 * Dh).astype(jnp.float32) + rh
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    li = gi.mean(-1)  # scalar gates per head
+    lf = jax.nn.log_sigmoid(gf.mean(-1))
+    zt = jnp.tanh(gz)
+    ot = jax.nn.sigmoid(go)
+    m_new = jnp.maximum(lf + m, li)
+    i_s = jnp.exp(li - m_new)[..., None]
+    f_s = jnp.exp(lf + m - m_new)[..., None]
+    c_new = f_s * c + i_s * zt
+    n_new = f_s * n + i_s
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+
+def slstm_forward(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    *,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    B, L, d = x.shape
+    H = cfg.n_heads
+    wx = dense(p["w"], x)  # (B, L, 4d)
+    state = cache or slstm_cache_init(cfg, B, x.dtype)
+    state = {k: v for k, v in state.items()}
+
+    def step(s, wx_t):
+        return _slstm_step(p, cfg, s, wx_t)
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, L, d).astype(x.dtype)  # (B, L, H*Dh)
+    y = _groupnorm(hs.reshape(B, L, H, d // H), p["gn"]["w"])
+    u = dense(p["up"], y)
+    a, b = jnp.split(u, 2, axis=-1)
+    out = dense(p["down"], jax.nn.gelu(a) * b)
+    new_cache = state if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,8 @@
+from .analytic import arch_profile, module_duration
+from .analytics import flops_per_token, kv_cache_bytes_per_token, param_count
+from .hardware import CATALOG, TARGET, TPUSpec
+
+__all__ = [
+    "CATALOG", "TARGET", "TPUSpec", "arch_profile", "flops_per_token",
+    "kv_cache_bytes_per_token", "module_duration", "param_count",
+]

@@ -1,0 +1,58 @@
+"""Analytic TPU profiler: (arch, batch, seq, hardware) -> execution duration.
+
+This replaces the paper's offline GPU profiling pass (Sec. III-A "profiling
+library"): module execution duration is the roofline max of the compute and
+HBM-streaming terms, with a batch-dependent efficiency ramp (small batches
+under-utilize the MXU) — producing Table-I-shaped profiles (duration affine-ish
+in batch, concave throughput) for the 10 assigned architectures.
+"""
+from __future__ import annotations
+
+from ..configs.base import ArchConfig
+from ..core.profiles import Config, ModuleProfile
+from .analytics import flops_per_token, param_count
+from .hardware import CATALOG, TPUSpec
+
+DEFAULT_BATCHES = (1, 2, 4, 8, 16, 32)
+
+
+def module_duration(
+    cfg: ArchConfig,
+    batch: int,
+    seq: int,
+    hw: TPUSpec,
+    *,
+    mode: str = "prefill",
+    base_mfu: float = 0.55,
+) -> float:
+    """Seconds to run one batched inference of the module on ONE chip."""
+    ftok = flops_per_token(cfg, seq, decode=(mode == "decode"))
+    tokens = batch * (1 if mode == "decode" else seq)
+    flops = ftok * tokens
+    # efficiency ramps with batch: tiny batches stall the MXU
+    mfu = base_mfu * min(1.0, 0.35 + 0.65 * (batch / 16.0) ** 0.5)
+    compute_t = flops / (hw.peak_flops_bf16 * mfu)
+    # memory: weights stream once per batch; activations per token
+    n_params = param_count(cfg, active=True)
+    bytes_moved = 2.0 * n_params + tokens * cfg.d_model * 2.0 * (2 * cfg.n_layers)
+    mem_t = bytes_moved / hw.hbm_bw
+    fixed = 30e-6  # launch/dispatch overhead
+    return fixed + max(compute_t, mem_t)
+
+
+def arch_profile(
+    cfg: ArchConfig,
+    *,
+    seq: int = 128,
+    batches=DEFAULT_BATCHES,
+    hardware: tuple[str, ...] = ("tpu-v5e", "tpu-v4", "tpu-v5p"),
+    mode: str = "prefill",
+) -> ModuleProfile:
+    """A Harpagon ModuleProfile for one architecture (the planner's input)."""
+    cfgs = []
+    for hw_name in hardware:
+        hw = CATALOG[hw_name]
+        for b in batches:
+            d = module_duration(cfg, b, seq, hw, mode=mode)
+            cfgs.append(Config(b, round(d, 6), hw.name, hw.unit_price))
+    return ModuleProfile(cfg.name, tuple(cfgs))

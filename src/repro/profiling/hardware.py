@@ -1,0 +1,28 @@
+"""TPU hardware catalog: the heterogeneous pool Harpagon schedules over.
+
+Price ratios follow on-demand cloud pricing; the P100/V100 heterogeneity of
+the paper maps onto TPU generations (DESIGN.md Sec. 3/7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TPUSpec:
+    name: str
+    peak_flops_bf16: float  # FLOP/s per chip
+    hbm_bw: float  # bytes/s per chip
+    hbm_bytes: float
+    ici_bw: float  # bytes/s per link
+    unit_price: float  # relative $ / chip-hour
+
+
+TPU_V5E = TPUSpec("tpu-v5e", 197e12, 819e9, 16e9, 50e9, 1.0)
+TPU_V4 = TPUSpec("tpu-v4", 275e12, 1228e9, 32e9, 50e9, 1.35)
+TPU_V5P = TPUSpec("tpu-v5p", 459e12, 2765e9, 96e9, 100e9, 1.75)
+
+CATALOG: dict[str, TPUSpec] = {t.name: t for t in (TPU_V5E, TPU_V4, TPU_V5P)}
+
+# the dry-run / roofline target (single chip numbers)
+TARGET = TPU_V5E

@@ -1,0 +1,4 @@
+from .engine import ServeResult, ServingEngine
+from .simulator import SimResult, simulate
+
+__all__ = ["ServeResult", "ServingEngine", "SimResult", "simulate"]

@@ -1,0 +1,8 @@
+from .checkpoint import restore, save
+from .loop import TrainResult, cross_entropy, make_loss_fn, make_train_step, train
+from .optimizer import OptConfig, adamw_init, adamw_update, schedule
+
+__all__ = [
+    "OptConfig", "TrainResult", "adamw_init", "adamw_update", "cross_entropy",
+    "make_loss_fn", "make_train_step", "restore", "save", "schedule", "train",
+]

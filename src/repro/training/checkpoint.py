@@ -1,0 +1,48 @@
+"""Checkpointing: params/opt-state pytrees <-> .npz, path-keyed."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(path: str, tree: Any) -> None:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    for keypath, leaf in flat:
+        arrays[_path_str(keypath)] = np.asarray(leaf)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for keypath, leaf in flat:
+            key = _path_str(keypath)
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key}")
+            arr = data[key]
+            if arr.shape != leaf.shape:
+                raise ValueError(f"{key}: shape {arr.shape} != expected {leaf.shape}")
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

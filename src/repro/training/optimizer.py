@@ -1,0 +1,83 @@
+"""AdamW + cosine schedule + global-norm clipping, in pure JAX."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio * lr."""
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * factor.astype(x.dtype), tree), norm
+
+
+def adamw_init(params: Any) -> dict[str, Any]:
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"m": zeros(params), "v": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(
+    cfg: OptConfig, params: Any, grads: Any, opt_state: dict[str, Any]
+) -> tuple[Any, dict[str, Any], dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [x[0] for x in new])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [x[1] for x in new]),
+        "v": jax.tree.unflatten(treedef, [x[2] for x in new]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,4 @@
+from .apps import APPS, app_by_name
+from .synth import synth_profiles, synth_workloads
+
+__all__ = ["APPS", "app_by_name", "synth_profiles", "synth_workloads"]

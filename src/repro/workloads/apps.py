@@ -1,0 +1,63 @@
+"""The five multi-DNN applications of the paper's evaluation (Sec. IV-A).
+
+DAG shapes mirror the cited applications:
+
+* traffic  — SSD detector feeding parallel vehicle / pedestrian classifiers [12]
+* face     — face detector -> PRNet keypoint alignment [25]
+* pose     — person detector -> OpenPose estimator [26]
+* caption  — frame preprocessing -> S2VT encoder -> S2VT decoder [27]
+* actdet   — detector -> (tracker || re-id) -> action classifier (Caesar) [28]
+
+Per-module request rates are the app rate scaled by a per-module *fanout*
+(e.g. a detector emits several crops per frame), fixed per app as in the
+frame-rate-proportionality cost model of the paper.
+"""
+from __future__ import annotations
+
+from ..core.dag import AppDAG, Leaf, par, series, Workload
+
+TRAFFIC = AppDAG(
+    "traffic",
+    series(Leaf("ssd_detect"), par(Leaf("vehicle_cls"), Leaf("pedestrian_cls"))),
+)
+FACE = AppDAG("face", series(Leaf("face_detect"), Leaf("prnet_align")))
+POSE = AppDAG("pose", series(Leaf("person_detect"), Leaf("openpose")))
+CAPTION = AppDAG(
+    "caption", series(Leaf("frame_prep"), Leaf("s2vt_encode"), Leaf("s2vt_decode"))
+)
+ACTDET = AppDAG(
+    "actdet",
+    series(
+        Leaf("act_detect"),
+        par(Leaf("act_track"), Leaf("act_reid")),
+        Leaf("action_cls"),
+    ),
+)
+
+APPS: tuple[AppDAG, ...] = (TRAFFIC, FACE, POSE, CAPTION, ACTDET)
+
+# requests per app-level frame for each module (fanout factors)
+FANOUT: dict[str, dict[str, float]] = {
+    "traffic": {"ssd_detect": 1.0, "vehicle_cls": 2.0, "pedestrian_cls": 3.0},
+    "face": {"face_detect": 1.0, "prnet_align": 2.0},
+    "pose": {"person_detect": 1.0, "openpose": 1.0},
+    "caption": {"frame_prep": 1.0, "s2vt_encode": 1.0, "s2vt_decode": 0.5},
+    "actdet": {
+        "act_detect": 1.0,
+        "act_track": 1.5,
+        "act_reid": 1.5,
+        "action_cls": 1.0,
+    },
+}
+
+
+def app_by_name(name: str) -> AppDAG:
+    for a in APPS:
+        if a.name == name:
+            return a
+    raise KeyError(name)
+
+
+def make_workload(app: AppDAG, rate: float, slo: float, tag: str = "") -> Workload:
+    rates = {m: rate * FANOUT[app.name][m] for m in app.modules}
+    return Workload(app, rates, slo, tag or f"{app.name}@{rate:g}/{slo:g}")

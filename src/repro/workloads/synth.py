@@ -1,0 +1,85 @@
+"""Synthetic profile library + the 1131-workload suite (paper Sec. IV-A).
+
+The paper profiles each module offline on a heterogeneous pool (P100/V100)
+and synthesizes 1131 workloads of the five apps from public video streams.
+We reproduce the *structure*: every module gets a Table-I-shaped profile
+(duration affine in batch size => concave throughput) on a three-tier TPU
+hardware catalog with per-module hardware affinities, and workloads sweep a
+(rate x SLO) grid per app, truncated to exactly 1131.
+
+Everything is deterministic under ``seed``.
+"""
+from __future__ import annotations
+
+import random
+from typing import Mapping
+
+from ..core.dag import Workload
+from ..core.profiles import Config, HARDWARE_CATALOG, ModuleProfile
+from .apps import APPS, make_workload
+
+BATCHES = (1, 2, 4, 8, 16, 32, 64)
+
+# plausible per-module compute scales (seconds at batch 1 on tpu-v5e);
+# Table-I-scale durations (0.05-0.8 s) so the latency budget actually binds
+_MODULE_SCALE = {
+    "ssd_detect": 0.25,
+    "vehicle_cls": 0.06,
+    "pedestrian_cls": 0.07,
+    "face_detect": 0.18,
+    "prnet_align": 0.14,
+    "person_detect": 0.22,
+    "openpose": 0.40,
+    "frame_prep": 0.04,
+    "s2vt_encode": 0.30,
+    "s2vt_decode": 0.45,
+    "act_detect": 0.28,
+    "act_track": 0.10,
+    "act_reid": 0.12,
+    "action_cls": 0.15,
+}
+
+
+def synth_profiles(seed: int = 0) -> dict[str, ModuleProfile]:
+    """One Table-I-shaped profile per module over the TPU catalog."""
+    rng = random.Random(seed)
+    profiles: dict[str, ModuleProfile] = {}
+    for mod, scale in _MODULE_SCALE.items():
+        # duration(b) = alpha + beta * b   (fixed overhead + per-item time)
+        alpha = scale * rng.uniform(0.6, 1.4)
+        beta = scale * rng.uniform(0.15, 0.45)
+        # per-hardware speed factor: v5p is 1.3-2.4x faster but 1.75x pricier,
+        # v4 is 0.95-1.45x the v5e speed at 1.35x the price => the best
+        # throughput-cost hardware is module dependent, as in the paper.
+        speed = {
+            "tpu-v5e": 1.0,
+            "tpu-v4": rng.uniform(0.95, 1.45),
+            "tpu-v5p": rng.uniform(1.3, 2.4),
+        }
+        cfgs = []
+        for hw in HARDWARE_CATALOG:
+            s = speed[hw.name]
+            for b in BATCHES:
+                d = (alpha + beta * b) / s
+                cfgs.append(Config(b, round(d, 6), hw.name, hw.unit_price))
+        profiles[mod] = ModuleProfile(mod, tuple(cfgs))
+    return profiles
+
+
+def synth_workloads(n: int = 1131, seed: int = 0) -> list[Workload]:
+    """Exactly ``n`` workloads sweeping (app x rate x SLO)."""
+    rng = random.Random(seed + 1)
+    rates = [round(10 * 1.26 ** i, 1) for i in range(24)]  # 10 .. ~2.1k req/s
+    slos = [0.4, 0.5, 0.6, 0.8, 1.0, 1.2, 1.5, 2.0, 2.5, 3.0]
+    out: list[Workload] = []
+    combos = [
+        (app, r, s) for app in APPS for r in rates for s in slos
+    ]  # 5 * 24 * 10 = 1200
+    rng.shuffle(combos)
+    for app, r, s in combos:
+        # mild jitter so rates are not exact multiples of profile throughputs
+        rate = r * rng.uniform(0.92, 1.08)
+        out.append(make_workload(app, round(rate, 2), s))
+        if len(out) >= n:
+            break
+    return out

@@ -1,0 +1,120 @@
+"""Paper worked examples: Table II, Sec. II / III-B numbers, Theorems 1-2."""
+import math
+
+import pytest
+
+from repro.core import (
+    Alloc,
+    Policy,
+    generate_config,
+    generate_config_ktuple,
+    module_wcl,
+    total_cost,
+)
+from repro.core.profiles import TABLE1_M1, TABLE1_M3, TABLE_M4
+from repro.core.residual import apply_dummy, leftover_workloads
+from repro.core.scheduler import get_wcl
+
+
+def costs(allocs):
+    return round(total_cost(allocs), 6)
+
+
+class TestSecIIExample:
+    """M1, 100 req/s, SLO 0.4 s (paper Sec. II)."""
+
+    def test_round_robin_needs_5_machines(self):
+        ok, allocs = generate_config_ktuple(100.0, 0.4, TABLE1_M1, Policy.RR, 2)
+        assert ok
+        assert costs(allocs) == 5.0  # batch 4, 5 machines
+        assert allocs[0].config.batch == 4
+
+    def test_tc_dispatch_needs_4_machines(self):
+        ok, allocs = generate_config(100.0, 0.4, TABLE1_M1, Policy.TC)
+        assert ok
+        assert costs(allocs) == 4.0  # batch 8 feasible only with TC dispatch
+        assert allocs[0].config.batch == 8
+
+    def test_wcl_values_match_paper(self):
+        # paper: batch-dispatch L_wc for b=2,4,8 are 0.18, 0.24, 0.40
+        by_batch = {c.batch: c for c in TABLE1_M1.configs}
+        for b, expect in [(2, 0.18), (4, 0.24), (8, 0.40)]:
+            assert get_wcl(by_batch[b], Policy.TC, 100.0, full=True) == pytest.approx(expect)
+
+
+class TestTable2:
+    """M3, 198 req/s, SLO 1.0 s — scheduling methods S1-S4."""
+
+    def test_s1_nexus_style(self):
+        ok, s1 = generate_config_ktuple(198.0, 1.0, TABLE1_M3, Policy.RR, 2)
+        assert ok and costs(s1) == 6.3
+        assert [(a.config.batch, round(a.machines, 2)) for a in s1] == [(8, 6.0), (2, 0.3)]
+
+    def test_s2_batch_aware_two_tuple(self):
+        ok, s2 = generate_config_ktuple(198.0, 1.0, TABLE1_M3, Policy.TC, 2)
+        assert ok and costs(s2) == 5.9
+        assert [(a.config.batch, round(a.machines, 2)) for a in s2] == [(32, 4.0), (2, 1.9)]
+
+    def test_s3_multi_tuple(self):
+        ok, s3 = generate_config(198.0, 1.0, TABLE1_M3, Policy.TC)
+        assert ok and costs(s3) == 5.3
+        assert [(a.config.batch, round(a.machines, 2)) for a in s3] == [
+            (32, 4.0),
+            (8, 1.0),
+            (2, 0.3),
+        ]
+
+    def test_s4_dummy(self):
+        ok, s3 = generate_config(198.0, 1.0, TABLE1_M3, Policy.TC)
+        dummy, s4 = apply_dummy(198.0, 1.0, TABLE1_M3, s3, Policy.TC)
+        assert dummy == pytest.approx(2.0)
+        assert costs(s4) == 5.0
+        assert [(a.config.batch, round(a.machines, 2)) for a in s4] == [(32, 5.0)]
+
+    def test_leftover_workloads(self):
+        ok, s3 = generate_config(198.0, 1.0, TABLE1_M3, Policy.TC)
+        u = leftover_workloads(s3)
+        assert u[0] == pytest.approx(38.0)  # paper: u for b32 = 32 + 6
+
+
+class TestTheorem1:
+    def test_m4_worked_example(self):
+        """A, B at b6 d2.0, C at b2 d1.0; T = 8 req/s (Sec. III-B)."""
+        c6, c2 = TABLE_M4.configs
+        allocs = [Alloc(c6, 2.0, 6.0), Alloc(c2, 1.0, 2.0)]
+        # w for A/B is 8, for C is 2
+        assert module_wcl(allocs, Policy.TC) == pytest.approx(2.0 + 6 / 8)
+        # RR: full machines 2d = 4.0
+        assert module_wcl(allocs, Policy.RR) == pytest.approx(4.0)
+        # DT (Scrooge): d + b/t = 2d for every machine
+        assert module_wcl(allocs, Policy.DT) == pytest.approx(4.0)
+
+    def test_tc_never_worse_than_rr(self):
+        for T in (10.0, 50.0, 198.0, 300.0):
+            ok, allocs = generate_config(T, 2.0, TABLE1_M3, Policy.TC)
+            if not ok:
+                continue
+            assert module_wcl(allocs, Policy.TC) <= module_wcl(allocs, Policy.RR) + 1e-9
+
+
+class TestAlgorithm1:
+    def test_covers_workload_exactly(self):
+        for T in (1.0, 37.5, 100.0, 198.0, 1000.0):
+            ok, allocs = generate_config(T, 1.0, TABLE1_M3, Policy.TC)
+            if ok:
+                assert sum(a.rate for a in allocs) == pytest.approx(T)
+                assert module_wcl(allocs, Policy.TC) <= 1.0 + 1e-9
+
+    def test_infeasible_slo(self):
+        ok, allocs = generate_config(100.0, 0.05, TABLE1_M3, Policy.TC)
+        assert not ok and allocs == []
+
+    def test_zero_rate(self):
+        ok, allocs = generate_config(0.0, 1.0, TABLE1_M3, Policy.TC)
+        assert ok and allocs == []
+
+    def test_ktuple_1_single_config(self):
+        ok, allocs = generate_config_ktuple(100.0, 1.0, TABLE1_M3, Policy.RR, 1)
+        assert ok
+        assert len({a.config for a in allocs}) == 1
+        assert sum(a.rate for a in allocs) == pytest.approx(100.0)

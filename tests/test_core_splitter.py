@@ -1,0 +1,104 @@
+"""Latency splitting: LC example, Algorithm 2, optimizers, baseline splitters."""
+import pytest
+
+from repro.core import Leaf, Policy, Workload, par, series
+from repro.core.dag import AppDAG
+from repro.core.profiles import TABLE1, TABLE1_M1, TABLE1_M2, TABLE1_M3
+from repro.core.splitter import (
+    split_cost,
+    split_even,
+    split_lc,
+    split_quantized,
+    split_throughput,
+    split_wcl,
+)
+
+
+def two_module_wl(slo=1.2, t1=100.0, t2=100.0):
+    dag = AppDAG("app", series(Leaf("M1"), Leaf("M2")))
+    return Workload(dag, {"M1": t1, "M2": t2}, slo)
+
+
+PROFILES = {"M1": TABLE1_M1, "M2": TABLE1_M2, "M3": TABLE1_M3}
+
+
+class TestLCExample:
+    def test_paper_lc_values(self):
+        """Sec. III-D: M1 at T=100 from b2: LC(b4)=50, LC(b8)=18.2."""
+        by_batch = {c.batch: c for c in TABLE1_M1.configs}
+        T = 100.0
+        prev = by_batch[2]
+        for b, expect in [(4, 50.0), (8, 18.2)]:
+            new = by_batch[b]
+            dcost = split_cost(prev, T) - split_cost(new, T)
+            dlat = split_wcl(new, T, Policy.TC) - split_wcl(prev, T, Policy.TC)
+            assert dcost / dlat == pytest.approx(expect, abs=0.05)
+
+
+class TestSplitters:
+    def test_lc_feasible_budgets(self):
+        wl = two_module_wl()
+        budgets = split_lc(wl, PROFILES, Policy.TC)
+        assert budgets is not None
+        assert wl.app.latency(budgets) <= wl.slo + 1e-9
+
+    def test_infeasible_returns_none(self):
+        wl = two_module_wl(slo=0.05)
+        assert split_lc(wl, PROFILES, Policy.TC) is None
+
+    def test_quantized_close_to_lc(self):
+        wl = two_module_wl()
+        b_lc = split_lc(wl, PROFILES, Policy.TC)
+        b_q = split_quantized(wl, PROFILES, Policy.TC, q=0.01)
+        assert b_q is not None
+        assert wl.app.latency(b_q) <= wl.slo + 1e-9
+
+    def test_throughput_based_feasible(self):
+        wl = two_module_wl()
+        b = split_throughput(wl, PROFILES, Policy.TC)
+        assert b is not None and wl.app.latency(b) <= wl.slo + 1e-9
+
+    def test_even_split(self):
+        wl = two_module_wl(slo=2.0)
+        b = split_even(wl, PROFILES, Policy.RR)
+        assert b is not None
+        assert all(v == pytest.approx(1.0) for v in b.values())
+
+
+class TestNodeMerger:
+    def test_sibling_groups(self):
+        dag = AppDAG("t", series(Leaf("M1"), par(Leaf("M2"), Leaf("M3"))))
+        groups = dag.sibling_groups()
+        assert groups == [("M2", "M3")]
+
+    def test_merger_never_hurts(self):
+        dag = AppDAG("t", series(Leaf("M1"), par(Leaf("M2"), Leaf("M3"))))
+        wl = Workload(dag, {"M1": 80.0, "M2": 60.0, "M3": 60.0}, 1.0)
+        profiles = {"M1": TABLE1_M1, "M2": TABLE1_M2, "M3": TABLE1_M3}
+
+        def total(budgets):
+            out = 0.0
+            for m, L in budgets.items():
+                feas = [
+                    c for c in profiles[m].configs
+                    if split_wcl(c, wl.rates[m], Policy.TC) <= L + 1e-9
+                ]
+                out += min(split_cost(c, wl.rates[m]) for c in feas)
+            return out
+
+        with_m = split_lc(wl, profiles, Policy.TC, node_merge=True)
+        without = split_lc(wl, profiles, Policy.TC, node_merge=False)
+        assert with_m is not None and without is not None
+        assert total(with_m) <= total(without) + 1e-6
+
+
+class TestDAG:
+    def test_latency_series_parallel(self):
+        dag = AppDAG("t", series(Leaf("a"), par(Leaf("b"), Leaf("c")), Leaf("d")))
+        lat = dag.latency({"a": 1.0, "b": 2.0, "c": 3.0, "d": 1.0})
+        assert lat == 5.0  # 1 + max(2,3) + 1
+        assert dag.depth == 3
+
+    def test_edges(self):
+        dag = AppDAG("t", series(Leaf("a"), par(Leaf("b"), Leaf("c")), Leaf("d")))
+        assert set(dag.edges) == {("a", "b"), ("a", "c"), ("b", "d"), ("c", "d")}

@@ -1,0 +1,46 @@
+"""Serving engine: fanout expansion, SLO attainment, baseline comparison."""
+import pytest
+
+from repro.core import Planner
+from repro.core import baselines as B
+from repro.core.dispatch import Policy
+from repro.serving import ServingEngine
+from repro.workloads import synth_profiles
+from repro.workloads.apps import CAPTION, FACE, TRAFFIC, make_workload
+
+PROFILES = synth_profiles()
+
+
+def test_fanout_instances():
+    """traffic: vehicle_cls fanout 2.0, pedestrian_cls 3.0 — batch counts scale."""
+    wl = make_workload(TRAFFIC, rate=100.0, slo=2.0)
+    plan = Planner(B.HARPAGON).plan(wl, PROFILES)
+    assert plan.feasible
+    res = ServingEngine(plan).run(1000, 100.0)
+    st = res.module_stats
+    det = sum(len(g) for g in [st["ssd_detect"].latencies])
+    veh = len(st["vehicle_cls"].latencies)
+    ped = len(st["pedestrian_cls"].latencies)
+    # instances per frame follow the fanout ratios (tail batches may drop some)
+    assert veh == pytest.approx(2 * det, rel=0.1)
+    assert ped == pytest.approx(3 * det, rel=0.1)
+
+
+def test_attainment_across_apps():
+    for app, rate in ((FACE, 150.0), (CAPTION, 90.0)):
+        wl = make_workload(app, rate=rate, slo=2.5)
+        plan = Planner(B.HARPAGON).plan(wl, PROFILES)
+        if not plan.feasible:
+            continue
+        res = ServingEngine(plan).run(1200, rate)
+        assert res.attainment >= 0.95, (app.name, res.attainment)
+
+
+def test_rr_engine_worse_or_equal_latency():
+    """Serving a TC plan with RR dispatch must not beat TC's worst latency."""
+    wl = make_workload(FACE, rate=200.0, slo=2.0)
+    plan = Planner(B.HARPAGON).plan(wl, PROFILES)
+    assert plan.feasible
+    tc = ServingEngine(plan, policy=Policy.TC).run(1500, 200.0)
+    rr = ServingEngine(plan, policy=Policy.RR).run(1500, 200.0)
+    assert max(tc.e2e_latencies) <= max(rr.e2e_latencies) + 0.15

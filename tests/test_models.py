@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests: reduced configs, forward/train/decode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SMOKE_ARCHS, SHAPES
+from repro.configs.base import LayerSpec
+from repro.data import lm_batches
+from repro.models import Model, segmentize
+from repro.training import OptConfig, adamw_init, make_train_step
+
+ARCH_NAMES = sorted(SMOKE_ARCHS)
+
+
+def _inputs(cfg, B=2, S=16, key=1):
+    if cfg.input_mode == "embeds":
+        return {"embeds": jax.random.normal(jax.random.key(key), (B, S, cfg.d_model)) * 0.1}
+    return {"tokens": jax.random.randint(jax.random.key(key), (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_and_finite(arch):
+    cfg = SMOKE_ARCHS[arch]
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    ins = _inputs(cfg)
+    out = m.forward(params, ins.get("tokens"), embeds=ins.get("embeds"))
+    assert out.logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(out.logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_no_nans(arch):
+    cfg = SMOKE_ARCHS[arch]
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(m, OptConfig(lr=1e-3, total_steps=10)))
+    emb = cfg.d_model if cfg.input_mode == "embeds" else None
+    batch = next(lm_batches(cfg.vocab_size, 2, 16, embeds_dim=emb))
+    params, opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(params))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_matches_full_forward(arch):
+    cfg = SMOKE_ARCHS[arch]
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    B, S = 2, 12
+    ins = _inputs(cfg, B, S)
+    full = m.forward(params, ins.get("tokens"), embeds=ins.get("embeds"))
+    cache = m.init_cache(B, 32)
+    if "tokens" in ins:
+        pre = m.forward(params, ins["tokens"][:, : S - 1], cache=cache, idx=0)
+        dec = m.forward(params, ins["tokens"][:, S - 1 :], cache=pre.cache, idx=S - 1)
+    else:
+        pre = m.forward(params, embeds=ins["embeds"][:, : S - 1], cache=cache, idx=0)
+        dec = m.forward(params, embeds=ins["embeds"][:, S - 1 :], cache=pre.cache, idx=S - 1)
+    a = np.asarray(full.logits[:, -1], np.float32)
+    b = np.asarray(dec.logits[:, 0], np.float32)
+    err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert err < 2e-3, err
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "gemma3-1b", "jamba-v0.1-52b", "xlstm-125m"])
+def test_multistep_decode_matches_full_forward(arch):
+    cfg = SMOKE_ARCHS[arch]
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    B, S, n_dec = 1, 8, 5
+    toks = jax.random.randint(jax.random.key(2), (B, S + n_dec), 0, cfg.vocab_size)
+    full = m.forward(params, toks)
+    cache = m.init_cache(B, 32)
+    out = m.forward(params, toks[:, :S], cache=cache, idx=0)
+    cache = out.cache
+    for t in range(n_dec):
+        out = m.forward(params, toks[:, S + t : S + t + 1], cache=cache, idx=S + t)
+        cache = out.cache
+        a = np.asarray(full.logits[:, S + t], np.float32)
+        b = np.asarray(out.logits[:, 0], np.float32)
+        err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+        assert err < 5e-3, (t, err)
+
+
+def test_ring_buffer_window_cache():
+    """gemma3 local layers: ring cache smaller than the sequence still matches."""
+    cfg = SMOKE_ARCHS["gemma3-1b"]  # sliding_window=16 in smoke config
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    B, S = 1, 24  # prefill longer than the 16-slot ring
+    toks = jax.random.randint(jax.random.key(3), (B, S + 2), 0, cfg.vocab_size)
+    full = m.forward(params, toks)
+    cache = m.init_cache(B, S + 2)
+    out = m.forward(params, toks[:, :S], cache=cache, idx=0)
+    for t in range(2):
+        out = m.forward(params, toks[:, S + t : S + t + 1], cache=out.cache, idx=S + t)
+        a = np.asarray(full.logits[:, S + t], np.float32)
+        b = np.asarray(out.logits[:, 0], np.float32)
+        err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+        assert err < 5e-3, (t, err)
+
+
+def test_segmentize_patterns():
+    specs = ARCHS["deepseek-v3-671b"].layer_specs()
+    segs = segmentize(specs)
+    assert [(len(p), r) for p, r in segs] == [(1, 3), (1, 58)]
+    segs = segmentize(ARCHS["jamba-v0.1-52b"].layer_specs())
+    assert [(len(p), r) for p, r in segs] == [(8, 4)]
+    segs = segmentize(ARCHS["gemma3-1b"].layer_specs())
+    assert sum(len(p) * r for p, r in segs) == 26
+    segs = segmentize(ARCHS["qwen1.5-4b"].layer_specs())
+    assert [(len(p), r) for p, r in segs] == [(1, 40)]
+
+
+def test_layer_specs_structure():
+    cfg = ARCHS["jamba-v0.1-52b"]
+    specs = cfg.layer_specs()
+    assert sum(1 for s in specs if s.mixer == "attn") == 4  # 1:7 over 32 layers
+    assert sum(1 for s in specs if s.ffn == "moe") == 16  # every other layer
+    cfg = ARCHS["gemma3-1b"]
+    specs = cfg.layer_specs()
+    assert sum(1 for s in specs if s.window) >= 20  # 5:1 local:global
+    cfg = ARCHS["deepseek-v3-671b"]
+    specs = cfg.layer_specs()
+    assert all(s.mixer == "mla" for s in specs)
+    assert sum(1 for s in specs if s.ffn == "moe") == 58
+
+
+def test_mrope_text_equals_1d_rope():
+    """Identical t/h/w position streams must reduce M-RoPE to 1-D RoPE."""
+    from repro.models.layers import apply_rope
+
+    x = jax.random.normal(jax.random.key(0), (2, 8, 4, 32))
+    pos1 = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    pos3 = jnp.broadcast_to(pos1, (3, 2, 8))
+    a = apply_rope(x, pos1, 10000.0)
+    b = apply_rope(x, pos3, 10000.0, mrope_sections=(4, 6, 6))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

@@ -1,0 +1,115 @@
+"""End-to-end planner: Harpagon vs baselines vs brute-force optimum."""
+import math
+
+import pytest
+
+from repro.core import Planner
+from repro.core import baselines as B
+from repro.core.bruteforce import optimal_cost
+from repro.workloads import synth_profiles, synth_workloads
+
+PROFILES = synth_profiles()
+WORKLOADS = synth_workloads(60)
+
+
+@pytest.fixture(scope="module")
+def plans():
+    planners = {o.name: Planner(o) for o in (B.HARPAGON,) + B.BASELINES}
+    out = []
+    for wl in WORKLOADS:
+        out.append({k: p.plan(wl, PROFILES) for k, p in planners.items()})
+    return out
+
+
+def test_harpagon_never_worse_than_baselines(plans):
+    for row in plans:
+        h = row["harpagon"]
+        if not h.feasible:
+            continue
+        for name, plan in row.items():
+            if plan.feasible:
+                assert h.cost <= plan.cost + 1e-6, (name, h.cost, plan.cost)
+
+
+def test_harpagon_feasible_whenever_any_baseline_is(plans):
+    for row in plans:
+        if any(p.feasible for p in row.values()):
+            assert row["harpagon"].feasible
+
+
+def test_plans_satisfy_slo(plans):
+    for row in plans:
+        for plan in row.values():
+            if plan.feasible:
+                assert plan.e2e_latency <= plan.workload.slo + 1e-6
+
+
+def test_baseline_ordering_qualitative(plans):
+    """Scrooge is the strongest baseline, Clipper the weakest (paper Fig. 5)."""
+    sums = {k: 0.0 for k in ("nexus", "scrooge", "inferline", "clipper")}
+    n = 0
+    for row in plans:
+        h = row["harpagon"]
+        if not h.feasible or not all(p.feasible for p in row.values()):
+            continue
+        n += 1
+        for k in sums:
+            sums[k] += row[k].cost / h.cost
+    assert n > 10
+    avg = {k: v / n for k, v in sums.items()}
+    assert avg["scrooge"] <= avg["nexus"]
+    assert avg["scrooge"] <= avg["clipper"]
+    assert all(v >= 1.0 for v in avg.values())
+
+
+def test_optimality_rate_vs_bruteforce():
+    h = Planner(B.HARPAGON)
+    hits = tot = 0
+    worst = 1.0
+    for wl in WORKLOADS[:40]:
+        plan = h.plan(wl, PROFILES)
+        if not plan.feasible:
+            continue
+        opt = min(optimal_cost(wl, PROFILES), plan.cost)
+        tot += 1
+        ratio = plan.cost / opt
+        worst = max(worst, ratio)
+        if ratio <= 1 + 1e-6:
+            hits += 1
+    assert tot >= 20
+    assert hits / tot >= 0.75  # paper: 91.5%; generous margin for profile diffs
+    assert worst <= 1.15  # paper: max +12.1% extra
+
+
+def test_planner_runtime_milliseconds():
+    h = Planner(B.HARPAGON)
+    times = []
+    for wl in WORKLOADS[:30]:
+        plan = h.plan(wl, PROFILES)
+        times.append(plan.runtime_s)
+    # paper: ~5 ms average runtime
+    assert sum(times) / len(times) < 0.05
+
+
+def test_ablations_never_beat_harpagon():
+    planners = {o.name: Planner(o) for o in B.ABLATIONS}
+    h = Planner(B.HARPAGON)
+    # harp-q0.01 can win per the paper (7.3% of workloads); harp-dt's literal
+    # "d + b/t" model claims costs that are unsound for partial machines, so
+    # its claimed cost is not comparable; nnm/ncd variants can win rarely.
+    exceptions = {"harp-q0.01", "harp-q0.1", "harp-dt", "harp-nnm", "harp-ncd"}
+    wins = {k: 0 for k in planners}
+    n = 0
+    for wl in WORKLOADS[:40]:
+        hp = h.plan(wl, PROFILES)
+        if not hp.feasible:
+            continue
+        n += 1
+        for name, p in planners.items():
+            pl = p.plan(wl, PROFILES)
+            if pl.feasible and pl.cost < hp.cost - 1e-6:
+                wins[name] += 1
+    for name, w in wins.items():
+        if name not in exceptions:
+            # allow rare heuristic wins (<15% of workloads)
+            assert w <= max(2, 0.15 * n), (name, w, n)

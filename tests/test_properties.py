@@ -1,0 +1,123 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Alloc, Policy, generate_config, module_wcl, total_cost
+from repro.core.dispatch import config_wcl, dispatch_trace, expand_machines
+from repro.core.profiles import Config, ModuleProfile
+from repro.core.residual import apply_dummy
+from repro.core.scheduler import get_wcl
+from repro.serving.simulator import simulate
+
+
+@st.composite
+def profiles(draw):
+    n = draw(st.integers(2, 6))
+    cfgs = []
+    base = draw(st.floats(0.02, 0.5))
+    for i in range(n):
+        b = 2 ** draw(st.integers(0, 6))
+        # duration affine in batch => concave throughput, like real profiles
+        beta = draw(st.floats(0.1, 0.9))
+        d = base * (1 + beta * b)
+        p = draw(st.sampled_from([1.0, 1.35, 1.75]))
+        cfgs.append(Config(b, round(d, 6), f"hw{p}", p))
+    return ModuleProfile("m", tuple(cfgs))
+
+
+@given(profiles(), st.floats(1.0, 500.0), st.floats(0.1, 5.0))
+@settings(max_examples=60, deadline=None)
+def test_scheduler_invariants(profile, T, L):
+    ok, allocs = generate_config(T, L, profile, Policy.TC)
+    if not ok:
+        return
+    # exact coverage
+    assert math.isclose(sum(a.rate for a in allocs), T, rel_tol=1e-9)
+    # every machine within budget
+    assert module_wcl(allocs, Policy.TC) <= L + 1e-9
+    # allocations ordered by effective ratio descending (greedy walk;
+    # dummy-filled residual machines rank last)
+    ratios = [a.eff_ratio for a in allocs]
+    assert all(r1 >= r2 - 1e-9 for r1, r2 in zip(ratios, ratios[1:]))
+    # cost is at least the fractional lower bound T / max ratio
+    lb = T / profile.configs[0].ratio
+    assert total_cost(allocs) >= lb - 1e-9
+
+
+@given(profiles(), st.floats(1.0, 500.0), st.floats(0.1, 5.0))
+@settings(max_examples=60, deadline=None)
+def test_tc_wcl_never_worse_than_rr(profile, T, L):
+    ok, allocs = generate_config(T, L, profile, Policy.TC)
+    if not ok:
+        return
+    assert module_wcl(allocs, Policy.TC) <= module_wcl(allocs, Policy.RR) + 1e-9
+
+
+@given(profiles(), st.floats(1.0, 500.0), st.floats(0.1, 5.0))
+@settings(max_examples=40, deadline=None)
+def test_dummy_only_reduces_cost(profile, T, L):
+    ok, allocs = generate_config(T, L, profile, Policy.TC)
+    if not ok:
+        return
+    base = total_cost(allocs)
+    dummy, new_allocs = apply_dummy(T, L, profile, allocs, Policy.TC)
+    assert total_cost(new_allocs) <= base + 1e-9
+    if dummy > 0:
+        assert total_cost(new_allocs) < base - 1e-12
+        # dummy-padded schedule still meets the latency budget
+        assert module_wcl(new_allocs, Policy.TC) <= L + 1e-9
+
+
+@given(profiles(), st.floats(5.0, 300.0))
+@settings(max_examples=25, deadline=None)
+def test_theorem1_bounds_simulation(profile, T):
+    """Empirical L_wc <= analytic L_wc + one-batch jitter (fluid-limit gap)."""
+    ok, allocs = generate_config(T, 10.0, profile, Policy.TC)
+    if not ok or any(a.dummy > 0 for a in allocs):
+        return  # the simulator streams real requests only
+    theory = module_wcl(allocs, Policy.TC)
+    sim = simulate(allocs, T, policy=Policy.TC, n_requests=1200)
+    if sim.n_requests == 0:
+        return
+    jitter = max(a.config.batch for a in allocs) / T
+    assert sim.max_latency <= theory + jitter + 1e-6
+
+
+@given(profiles(), st.integers(50, 400))
+@settings(max_examples=25, deadline=None)
+def test_tc_trace_is_batched_and_complete(profile, n):
+    ok, allocs = generate_config(100.0, 10.0, profile, Policy.TC)
+    if not ok or any(a.dummy > 0 for a in allocs):
+        return  # dummy-filled plans mix phantom requests into batches
+    machines = expand_machines(allocs)
+    trace = dispatch_trace(machines, n, Policy.TC)
+    # every request assigned exactly once, ids consecutive
+    assert [r for r, _ in trace] == list(range(n))
+    # consecutive runs per machine have length == its batch (except the tail)
+    runs = []
+    cur_m, cur_len = None, 0
+    for _, mid in trace:
+        if mid == cur_m:
+            cur_len += 1
+        else:
+            if cur_m is not None:
+                runs.append((cur_m, cur_len))
+            cur_m, cur_len = mid, 1
+    by_mid = {m.mid: m.config.batch for m in machines}
+    for mid, ln in runs[:-1]:
+        # a machine may legitimately receive several batches back-to-back
+        assert ln % by_mid[mid] == 0
+
+
+@given(
+    st.floats(1.0, 50.0),
+    st.integers(1, 64),
+    st.floats(0.05, 2.0),
+)
+@settings(max_examples=50, deadline=None)
+def test_wcl_monotone_in_collect_rate(rate, batch, dur):
+    c = Config(batch, dur)
+    lo = config_wcl(c, Policy.TC, collect_rate=rate)
+    hi = config_wcl(c, Policy.TC, collect_rate=rate * 2)
+    assert hi <= lo

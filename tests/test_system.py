@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests: plan -> serve across the full stack."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import Leaf, Planner, Workload, series
+from repro.core import baselines as B
+from repro.core.dag import AppDAG
+from repro.models import Model
+from repro.profiling import arch_profile
+from repro.serving import ServingEngine
+from repro.workloads import synth_profiles
+from repro.workloads.apps import CAPTION, make_workload
+
+
+def test_plan_and_serve_meets_slo():
+    """Harpagon plan served by the event engine attains the SLO."""
+    profiles = synth_profiles()
+    wl = make_workload(CAPTION, rate=120.0, slo=2.0)
+    plan = Planner(B.HARPAGON).plan(wl, profiles)
+    assert plan.feasible
+    engine = ServingEngine(plan)
+    res = engine.run(1500, 120.0)
+    assert len(res.e2e_latencies) > 500
+    # worst-case-latency planning => near-perfect attainment in simulation
+    assert res.attainment >= 0.97, res.attainment
+
+
+def test_plan_archs_with_analytic_profiles():
+    """Harpagon plans a chain of two assigned architectures end to end."""
+    archs = ["gemma3-1b", "qwen1.5-4b"]
+    dag = AppDAG("session", series(*[Leaf(a) for a in archs]))
+    profiles = {a: arch_profile(get_config(a), seq=128) for a in archs}
+    wl = Workload(dag, {a: 50.0 for a in archs}, 1.0)
+    plan = Planner(B.HARPAGON).plan(wl, profiles)
+    assert plan.feasible
+    assert plan.e2e_latency <= 1.0 + 1e-6
+    # baselines cost at least as much
+    for opts in B.BASELINES:
+        bl = Planner(opts).plan(wl, profiles)
+        if bl.feasible:
+            assert plan.cost <= bl.cost + 1e-6
+
+
+def test_real_executor_serving():
+    """Serve with REAL jitted model forwards as module executors."""
+    profiles = synth_profiles()
+    wl = make_workload(CAPTION, rate=60.0, slo=2.5)
+    plan = Planner(B.HARPAGON).plan(wl, profiles)
+    assert plan.feasible
+    cfg = get_config("smollm-360m", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    fwd = jax.jit(lambda p, t: model.forward(p, t).logits)
+    calls = []
+
+    def executor(b):
+        toks = jnp.zeros((b, 8), jnp.int32)
+        fwd(params, toks).block_until_ready()
+        calls.append(b)
+
+    executors = {m: executor for m in wl.app.modules}
+    engine = ServingEngine(plan, executors=executors)
+    res = engine.run(200, 60.0)
+    assert calls, "real executor was never invoked"
+    assert len(res.e2e_latencies) > 50
