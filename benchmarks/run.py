@@ -24,7 +24,8 @@ from repro.core.dispatch import Policy, module_wcl  # noqa: E402
 from repro.core.profiles import TABLE1_M3  # noqa: E402
 from repro.core.scheduler import generate_config, generate_config_ktuple  # noqa: E402
 from repro.core.residual import apply_dummy  # noqa: E402
-from repro.serving.simulator import simulate  # noqa: E402
+from repro.serving import ServingEngine, simulate, simulate_reference  # noqa: E402
+from repro.workloads.apps import FANOUT  # noqa: E402
 
 
 def finite_mean(xs):
@@ -192,6 +193,70 @@ def bench_fig8_multiconfig(n: int) -> None:
     emit("fig8_multiconfig", 0.0, derived)
 
 
+# ----------------------------------------------------- serving simulator
+def bench_slo_sweep(n: int) -> None:
+    """SLO attainment / p99 of replayed plans per planner preset under
+    uniform vs Poisson vs bursty (MMPP) arrivals, over >= 100 suite
+    workloads.  Batches wait to fill (``timeout=None``; tails flush at end
+    of stream) so the sweep isolates the arrival-process effect — Harpagon
+    runs machines at 100% utilization, where deadline flushing would add a
+    second, throughput-collapse effect (see ROADMAP open items)."""
+    wls = workload_suite(max(100, min(n, 200)))  # >=100 for coverage, <=200 for runtime
+    presets = (B.HARPAGON, B.NEXUS, B.CLIPPER)
+    kinds = ("uniform", "poisson", "bursty")
+    acc = {(p.name, k): ([], []) for p in presets for k in kinds}
+    planned = {p.name: 0 for p in presets}
+    t0 = time.perf_counter()
+    for wl in wls:
+        frame_rate = wl.rates[wl.app.modules[0]] / FANOUT[wl.app.name][wl.app.modules[0]]
+        for p in presets:
+            plan = Planner(p).plan(wl, PROFILES)
+            if not plan.feasible:
+                continue
+            planned[p.name] += 1
+            eng = ServingEngine(plan, policy=p.policy)
+            for k in kinds:
+                res = eng.run(600, frame_rate, arrivals=k, seed=0)
+                att, p99s = acc[(p.name, k)]
+                att.append(res.attainment)
+                p99s.append(res.p99 / wl.slo)
+    us = (time.perf_counter() - t0) * 1e6 / max(1, len(wls))
+    for p in presets:
+        for k in kinds:
+            att, p99s = acc[(p.name, k)]
+            emit(
+                f"slo_sweep_{p.name}_{k}",
+                us,
+                f"attain={finite_mean(att):.3f}|p99/slo={finite_mean(p99s):.3f}"
+                f"|workloads={planned[p.name]}/{len(wls)}",
+            )
+
+
+def bench_replay_speed(n: int) -> None:
+    """Vectorized replay kernel vs the frozen pure-Python loop at 10^6
+    requests on one planned module (acceptance: >= 5x)."""
+    profile = PROFILES["ssd_detect"]
+    ok, allocs = generate_config(500.0, 2.0, profile, Policy.TC)
+    assert ok
+    rate = sum(a.rate for a in allocs)
+    n_req = 1_000_000
+    # best-of-repeats so a transiently loaded machine can't skew the ratio
+    ref, us_ref = common.timed(
+        lambda: simulate_reference(allocs, rate, n_requests=n_req), repeat=2
+    )
+    new, us_vec = common.timed(
+        lambda: simulate(allocs, rate, n_requests=n_req), repeat=3
+    )
+    t_ref, t_vec = us_ref / 1e6, us_vec / 1e6
+    agree = abs(ref.max_latency - new.max_latency) < 1e-9 and ref.n_requests == new.n_requests
+    emit(
+        "replay_vectorized_speedup",
+        t_vec * 1e6,
+        f"python={t_ref:.2f}s|vectorized={t_vec:.3f}s|speedup={t_ref / t_vec:.1f}x"
+        f"|n=1e6|agree={agree}|target>=5x",
+    )
+
+
 # ----------------------------------------------------------- runtime
 def bench_runtime(n: int) -> None:
     """Planner runtime vs brute force (paper: 5 ms vs 35.9 s, >7000x)."""
@@ -224,6 +289,8 @@ BENCHES = {
     "fig7": bench_fig7_dispatch,
     "fig7sim": bench_fig7_simulation,
     "fig8": bench_fig8_multiconfig,
+    "slo_sweep": bench_slo_sweep,
+    "replay": bench_replay_speed,
     "runtime": bench_runtime,
 }
 

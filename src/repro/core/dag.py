@@ -9,6 +9,7 @@ force exploit.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Mapping, Union
 
@@ -96,6 +97,40 @@ def sp_depth(sp: SP) -> int:
     return max(sp_depth(p) for p in sp.parts)
 
 
+def topo_sort(
+    nodes: Iterable[str], edges: Iterable[tuple[str, str]]
+) -> list[str]:
+    """Kahn's algorithm over an explicit edge list, O(V + E).
+
+    Deterministic: among ready nodes the one earliest in ``nodes`` order is
+    emitted first (matching the legacy first-fit scan of the serving engine).
+    Raises ``ValueError`` on a cycle, naming the nodes left unordered.
+    """
+    order = list(nodes)
+    index = {m: i for i, m in enumerate(order)}
+    indeg = {m: 0 for m in order}
+    children: dict[str, list[str]] = {m: [] for m in order}
+    for u, v in edges:
+        if u not in indeg or v not in indeg:
+            raise ValueError(f"edge ({u}, {v}) references unknown node")
+        indeg[v] += 1
+        children[u].append(v)
+    ready = [index[m] for m in order if indeg[m] == 0]
+    heapq.heapify(ready)
+    out: list[str] = []
+    while ready:
+        m = order[heapq.heappop(ready)]
+        out.append(m)
+        for c in children[m]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                heapq.heappush(ready, index[c])
+    if len(out) != len(order):
+        stuck = sorted(set(order) - set(out))
+        raise ValueError(f"cycle in DAG: unordered nodes {stuck}")
+    return out
+
+
 @dataclass(frozen=True)
 class AppDAG:
     name: str
@@ -121,6 +156,9 @@ class AppDAG:
         for m in self.modules:
             buckets.setdefault((self.parents(m), self.children(m)), []).append(m)
         return [tuple(v) for v in buckets.values() if len(v) > 1]
+
+    def topo_order(self) -> list[str]:
+        return topo_sort(self.modules, self.edges)
 
     def latency(self, weights: Mapping[str, float]) -> float:
         return sp_latency(self.sp, weights)

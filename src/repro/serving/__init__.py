@@ -1,4 +1,34 @@
-from .engine import ServeResult, ServingEngine
+from .arrivals import (
+    ARRIVALS,
+    make_arrivals,
+    mmpp_arrivals,
+    poisson_arrivals,
+    trace_arrivals,
+    uniform_arrivals,
+)
+from .engine import ModuleStats, ServeResult, ServingEngine
+from .events import simulate_module_events
+from .replay import ModuleReplay, expand_fanout, replay_machine, replay_module
+from .reference import engine_run_reference, simulate_reference
 from .simulator import SimResult, simulate
 
-__all__ = ["ServeResult", "ServingEngine", "SimResult", "simulate"]
+__all__ = [
+    "ARRIVALS",
+    "ModuleReplay",
+    "ModuleStats",
+    "ServeResult",
+    "ServingEngine",
+    "SimResult",
+    "engine_run_reference",
+    "expand_fanout",
+    "make_arrivals",
+    "mmpp_arrivals",
+    "poisson_arrivals",
+    "replay_machine",
+    "replay_module",
+    "simulate",
+    "simulate_module_events",
+    "simulate_reference",
+    "trace_arrivals",
+    "uniform_arrivals",
+]

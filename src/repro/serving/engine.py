@@ -1,29 +1,45 @@
 """Serving engine: executes a Harpagon Plan over a request stream.
 
-Per module, the TC dispatcher hands whole batches to machines (weighted-fair
-batch scheduling, `core.dispatch.dispatch_trace`); machines execute batches
-with either (a) profiled durations (virtual time — used for the 1131-workload
-evaluations) or (b) real jitted JAX model calls on CPU (wall-clock measured,
-used by the end-to-end example).  Requests flow through the app DAG with
+Thin adapter over the unified simulation subsystem: arrival processes come
+from `repro.serving.arrivals` (uniform / poisson / bursty MMPP / diurnal
+trace), per-module batch replay runs on the numpy-vectorized kernel
+(`repro.serving.replay`) in virtual time, and on the discrete-event core
+(`repro.serving.events`) when real jitted executors are attached (wall-clock
+measured, used by the end-to-end example).
+
+Requests flow through the app DAG (Kahn toposort, `core.dag.topo_sort`) with
 per-module *fanout* (a detector emits several crops per frame; a decoder
 consumes every other frame): module m sees ``rates[m] / frame_rate``
 instances per frame, exactly the rates the plan provisioned for.
+
+Tail-batch semantics are real: with ``timeout`` set (seconds, or ``"budget"``
+to derive a per-module collection deadline from the plan), partial batches
+flush when their opener has waited that long — mid-stream under bursty
+arrivals and at end of stream.  The default (``timeout=None, tail="flush"``)
+reproduces the seed engine's numbers on uniform arrivals exactly (see
+`repro.serving.reference`).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Mapping
+from typing import Callable, Mapping, Sequence
 
-from ..core.dag import Workload
-from ..core.dispatch import Policy, dispatch_trace, expand_machines
+import numpy as np
+
+from ..core.dag import Workload, topo_sort
+from ..core.dispatch import Machine, Policy, dispatch_runs, expand_machines
 from ..core.harpagon import Plan
+from .arrivals import make_arrivals
+from .events import simulate_module_events
+from .replay import ModuleReplay, expand_fanout, replay_module, runs_to_assignment
 
 
 @dataclass
 class ModuleStats:
     latencies: list[float] = field(default_factory=list)
     batches: int = 0
+    dropped: int = 0
 
     @property
     def max_latency(self) -> float:
@@ -63,86 +79,119 @@ class ServingEngine:
         self.executors = executors or {}
         self.policy = policy
 
-    def run(self, n_frames: int, frame_rate: float) -> ServeResult:
+    def run(
+        self,
+        n_frames: int,
+        frame_rate: float,
+        *,
+        arrivals: "str | np.ndarray | Sequence[float]" = "uniform",
+        seed: int = 0,
+        timeout: "float | str | None" = None,
+        tail: str = "flush",
+    ) -> ServeResult:
         wl: Workload = self.plan.workload
-        arrival = [i / frame_rate for i in range(n_frames)]
+        arrival = make_arrivals(arrivals, n_frames, frame_rate, seed=seed)
         # finish time of frame i at module m (0.0 = not processed / dropped)
-        finish_at = {m: [0.0] * n_frames for m in wl.app.modules}
+        finish_at = {m: np.zeros(n_frames) for m in wl.app.modules}
         stats = {m: ModuleStats() for m in wl.app.modules}
-        for m in self._topo(wl):
+        for m in topo_sort(wl.app.modules, wl.app.edges):
             parents = wl.app.parents(m)
-            ready = [
-                max([arrival[i]] + [finish_at[p][i] for p in parents])
-                for i in range(n_frames)
-            ]
-            drop = [
-                any(finish_at[p][i] <= 0.0 for p in parents) for i in range(n_frames)
-            ] if parents else [False] * n_frames
-            fanout = wl.rates[m] / frame_rate
-            self._run_module(m, ready, drop, fanout, finish_at[m], stats[m])
-        sinks = [m for m in wl.app.modules if not wl.app.children(m)]
-        e2e = [
-            max(finish_at[s][i] for s in sinks) - arrival[i]
-            for i in range(n_frames)
-            if all(finish_at[s][i] > 0 for s in sinks)
-        ]
-        return ServeResult(e2e, stats, wl.slo)
-
-    def _topo(self, wl: Workload) -> list[str]:
-        seen: list[str] = []
-        mods = list(wl.app.modules)
-        while mods:
-            for m in mods:
-                if all(p in seen for p in wl.app.parents(m)):
-                    seen.append(m)
-                    mods.remove(m)
-                    break
+            if parents:
+                pf = np.stack([finish_at[p] for p in parents])
+                ready = np.maximum(arrival, pf.max(axis=0))
+                drop = (pf <= 0.0).any(axis=0)
             else:
-                raise RuntimeError("cycle in DAG")
-        return seen
+                ready = np.asarray(arrival, dtype=np.float64)
+                drop = np.zeros(n_frames, dtype=bool)
+            fanout = wl.rates[m] / frame_rate
+            self._run_module(
+                m, ready, drop, fanout, finish_at[m], stats[m],
+                timeout=timeout, tail=tail,
+            )
+        sinks = [m for m in wl.app.modules if not wl.app.children(m)]
+        sf = np.stack([finish_at[s] for s in sinks])
+        ok = (sf > 0).all(axis=0)
+        e2e = (sf.max(axis=0) - arrival)[ok]
+        return ServeResult(e2e.tolist(), stats, wl.slo)
 
-    def _run_module(self, m, ready, drop, fanout, finish, stats: ModuleStats):
+    def _module_timeout(
+        self, m: str, machines: "list[Machine]", timeout: "float | str | None"
+    ) -> "float | None | dict[int, float]":
+        """Resolve the batch-collection deadline for module ``m``.
+
+        ``"budget"`` derives a per-machine deadline from the plan: each
+        machine must flush early enough that collection + its own service
+        duration still fits the module's latency budget.
+        """
+        if timeout is None or isinstance(timeout, (int, float)):
+            return timeout
+        if timeout == "budget":
+            s = self.plan.schedules[m]
+            # floor at the real-rate fill time: dummy-padded plans assume the
+            # frontend injects phantom requests to speed collection, which the
+            # engine does not simulate — flushing faster than real traffic can
+            # fill a batch would silently overload the machine instead.  Under
+            # TC a machine's batch is a consecutive slice of the stream (fills
+            # at the whole module rate); under RR/DT it fills only at the
+            # machine's own share of the traffic.
+            tot = sum(mm.rate for mm in machines)
+            def fill(mm: Machine) -> float:
+                rate = s.rate
+                if self.policy is not Policy.TC and tot > 0:
+                    rate *= mm.rate / tot
+                return mm.config.batch / max(rate, 1e-12)
+            return {
+                mm.mid: max(s.budget - mm.config.duration, fill(mm))
+                for mm in machines
+            }
+        raise ValueError(f"unknown timeout spec {timeout!r}")
+
+    def _run_module(
+        self,
+        m: str,
+        ready: np.ndarray,
+        drop: np.ndarray,
+        fanout: float,
+        finish_frame: np.ndarray,
+        stats: ModuleStats,
+        *,
+        timeout: "float | str | None",
+        tail: str,
+    ) -> None:
         sched = self.plan.schedules[m]
         machines = expand_machines(list(sched.allocs))
-        n_frames = len(ready)
-        # expand frames into module-level request instances by fanout
-        order = sorted(range(n_frames), key=lambda i: ready[i])
-        instances: list[int] = []  # frame id per instance, in ready order
-        acc = 0.0
-        for i in order:
-            if drop[i]:
-                continue
-            acc += fanout
-            k = int(acc)
-            acc -= k
-            instances.extend([i] * k)
-        n = len(instances)
+        # expand frames into module-level request instances by fanout,
+        # in ready order, skipping frames dropped upstream
+        order = np.argsort(ready, kind="stable")
+        frames = order[~drop[order]]
+        instances = expand_fanout(frames, fanout)
+        n = instances.size
         if n == 0:
             return
-        trace = dispatch_trace(machines, n, self.policy)
-        by_machine: dict[int, list[int]] = {mm.mid: [] for mm in machines}
-        for slot, mid in trace:
-            by_machine[mid].append(instances[slot])
+        ready_inst = ready[instances]
+        runs = dispatch_runs(machines, n, self.policy)
+        w = self._module_timeout(m, machines, timeout)
         ex = self.executors.get(m)
-        for mm in machines:
-            fids = by_machine[mm.mid]
-            b, d = mm.config.batch, mm.config.duration
-            free = 0.0
-            for i in range(0, len(fids), b):
-                group = fids[i : i + b]
-                t_ready = max(ready[f] for f in group)
-                if len(group) < b:
-                    # tail batch: flushed on deadline (early-exec semantics)
-                    t_ready = max(t_ready, t_ready)
-                start = max(t_ready, free)
-                dur = d
-                if ex is not None:
-                    t0 = time.perf_counter()
-                    ex(b)
-                    dur = time.perf_counter() - t0
-                end = start + dur
-                free = end
-                stats.batches += 1
-                for f in group:
-                    finish[f] = max(finish[f], end)
-                    stats.latencies.append(end - ready[f])
+        if ex is None:
+            rep = replay_module(machines, ready_inst, runs, timeout=w, tail=tail)
+        else:
+            def _measured(machine: Machine, _group: int) -> float:
+                t0 = time.perf_counter()
+                ex(machine.config.batch)
+                return time.perf_counter() - t0
+
+            finish, batches = simulate_module_events(
+                machines,
+                ready_inst,
+                runs_to_assignment(runs, n),
+                timeout=w,
+                tail=tail,
+                executor=_measured,
+            )
+            rep = ModuleReplay(finish, runs_to_assignment(runs, n), batches)
+        done = rep.done
+        stats.batches += rep.n_batches
+        stats.dropped += int(n - done.sum())
+        stats.latencies.extend((rep.finish[done] - ready_inst[done]).tolist())
+        # frame finish = max over its instances (dropped instances contribute 0)
+        np.maximum.at(finish_frame, instances[done], rep.finish[done])

@@ -1,0 +1,131 @@
+"""Discrete-event core of the serving simulator (reference semantics).
+
+One module = a set of machines fed by a dispatcher.  The dispatcher's static
+request->machine assignment is computed up front (`core.dispatch`); what this
+core simulates is *batch formation and service* with real deadline semantics:
+
+* a machine's batch **opens** when a request lands in its empty formation
+  buffer, **closes** when it reaches the configured batch size — or, with a
+  finite ``timeout``, when the opener has waited ``timeout`` seconds (partial
+  flush, exactly what a real frontend does because it cannot know whether
+  more requests are coming);
+* closed batches queue FIFO at the machine; service takes the profiled
+  duration (or a real measured executor call) and the machine frees.
+
+Implemented as a single priority queue over arrival / batch-flush /
+machine-free events.  This is the *reference* implementation: it supports
+real executors and arbitrary arrival patterns, and the vectorized hot path
+(`repro.serving.replay`) is property-tested to agree with it.  End-of-stream
+handling when ``timeout is None`` is governed by ``tail``:
+
+* ``"flush"`` — execute the partial tail batch as soon as its last request
+  has arrived (the seed engine's behavior);
+* ``"drop"``  — discard tail requests (the seed simulator's behavior, i.e.
+  steady-state-only accounting).
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from ..core.dispatch import Machine
+
+_ARRIVE, _FLUSH, _FREE = 0, 1, 2
+
+
+def simulate_module_events(
+    machines: Sequence[Machine],
+    ready: np.ndarray,
+    assignment: np.ndarray,
+    *,
+    timeout: "float | None | Mapping[int, float]" = None,
+    tail: str = "flush",
+    executor: Callable[[Machine, int], float] | None = None,
+) -> tuple[np.ndarray, dict[int, int]]:
+    """Simulate one module; returns ``(finish, batches_per_machine)``.
+
+    ``ready`` is the sorted per-request ready time; ``assignment[i]`` the
+    machine id serving request ``i``.  ``timeout`` may be a single deadline
+    or a per-machine-id mapping.  ``finish[i]`` is the absolute completion
+    time (``np.nan`` for dropped tail requests).  ``executor`` (when given)
+    is called at each batch start with ``(machine, group_size)`` and must
+    return the measured service duration in seconds.
+    """
+    if tail not in ("flush", "drop"):
+        raise ValueError(f"unknown tail policy {tail!r}")
+    if isinstance(timeout, Mapping):
+        timeouts = {m.mid: timeout.get(m.mid) for m in machines}
+    else:
+        timeouts = {m.mid: timeout for m in machines}
+    ready = np.asarray(ready, dtype=np.float64)
+    n = ready.size
+    finish = np.full(n, np.nan)
+    by_mid = {m.mid: m for m in machines}
+    batches = {m.mid: 0 for m in machines}
+    openbuf: dict[int, list[int]] = {m.mid: [] for m in machines}
+    token = {m.mid: 0 for m in machines}  # bumped on close, voids stale flushes
+    queue: dict[int, deque] = {m.mid: deque() for m in machines}
+    free_at = {m.mid: 0.0 for m in machines}
+    busy = {m.mid: False for m in machines}
+    heap: list[tuple[float, int, int, int]] = []  # (time, kind, mid, payload)
+
+    def start_next(mid: int, now: float) -> None:
+        if busy[mid] or not queue[mid]:
+            return
+        batch_ready, rids = queue[mid].popleft()
+        m = by_mid[mid]
+        start = max(batch_ready, free_at[mid], now)
+        dur = executor(m, len(rids)) if executor is not None else m.config.duration
+        end = start + dur
+        busy[mid] = True
+        batches[mid] += 1
+        finish[rids] = end
+        heapq.heappush(heap, (end, _FREE, mid, 0))
+
+    def close_batch(mid: int, batch_ready: float, now: float) -> None:
+        rids = openbuf[mid]
+        openbuf[mid] = []
+        token[mid] += 1
+        queue[mid].append((batch_ready, rids))
+        start_next(mid, now)
+
+    ai = 0  # pointer into the (sorted) arrival stream
+    tails_done = False
+    while True:
+        # merge the sorted arrival stream with the flush/free heap; arrivals
+        # win ties (a request landing exactly at a deadline joins the batch)
+        if ai < n and (not heap or (ready[ai], _ARRIVE) <= heap[0][:2]):
+            t, rid = float(ready[ai]), ai
+            ai += 1
+            mid = int(assignment[rid])
+            buf = openbuf[mid]
+            buf.append(rid)
+            if len(buf) == 1 and timeouts[mid] is not None:
+                heapq.heappush(heap, (t + timeouts[mid], _FLUSH, mid, token[mid]))
+            if len(buf) >= by_mid[mid].config.batch:
+                close_batch(mid, batch_ready=t, now=t)
+            continue
+        if heap:
+            t, kind, mid, payload = heapq.heappop(heap)
+            if kind == _FLUSH:
+                if payload == token[mid] and openbuf[mid]:
+                    close_batch(mid, batch_ready=t, now=t)
+            else:  # _FREE
+                busy[mid] = False
+                free_at[mid] = t
+                start_next(mid, now=t)
+            continue
+        if not tails_done:
+            # stream over, queues drained: resolve leftover partial batches
+            tails_done = True
+            for mid, buf in openbuf.items():
+                if buf and timeouts[mid] is None and tail == "flush":
+                    close_batch(mid, batch_ready=float(ready[buf[-1]]), now=float(ready[buf[-1]]))
+                elif buf:
+                    openbuf[mid] = []  # drop (finish stays NaN)
+            continue
+        break
+    return finish, batches

@@ -1,16 +1,28 @@
-"""Discrete-event dispatch simulator: empirical validation of Theorem 1.
+"""Module-level dispatch simulator: empirical validation of Theorem 1.
 
-Requests arrive at a uniform rate (streaming-video regime, as in the paper);
-the dispatcher assigns them to machines under TC / RR policy via the literal
-`core.dispatch.dispatch_trace`; machines execute full batches taking the
-profiled duration.  The maximum observed request latency is compared against
-the analytic worst-case L_wc of `core.dispatch.module_wcl`.
+Thin adapter over the unified simulation subsystem: requests arrive under a
+pluggable arrival process (`repro.serving.arrivals` — uniform by default,
+the paper's streaming-video regime), the dispatcher assigns them to machines
+under TC / RR policy via the literal `core.dispatch.dispatch_runs`, and the
+numpy-vectorized replay kernel (`repro.serving.replay`) executes batches at
+the profiled duration.  The maximum observed request latency is compared
+against the analytic worst-case L_wc of `core.dispatch.module_wcl`.
+
+Tail semantics default to the seed behavior (``tail="drop"``: incomplete
+tail batches are out of steady state and excluded — Theorem 1 is a
+steady-state bound), reproducing the legacy numbers exactly; pass a finite
+``timeout`` for real deadline-flush semantics where every request completes.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Sequence
 
-from ..core.dispatch import Alloc, Machine, Policy, dispatch_trace, expand_machines
+import numpy as np
+
+from ..core.dispatch import Alloc, Policy, dispatch_runs, expand_machines
+from .arrivals import make_arrivals
+from .replay import replay_module
 
 
 @dataclass
@@ -19,6 +31,9 @@ class SimResult:
     mean_latency: float
     per_machine_max: dict[int, float]
     n_requests: int
+    dropped: int = 0
+    p99_latency: float = 0.0
+    latencies: np.ndarray | None = field(default=None, repr=False)
 
 
 def simulate(
@@ -27,39 +42,36 @@ def simulate(
     *,
     policy: Policy = Policy.TC,
     n_requests: int = 2000,
+    arrivals: "str | np.ndarray | Sequence[float]" = "uniform",
+    seed: int = 0,
+    timeout: float | None = None,
+    tail: str = "drop",
+    method: str = "vectorized",
 ) -> SimResult:
     machines = expand_machines(allocs)
-    trace = dispatch_trace(machines, n_requests, policy)
-    arrivals = [i / total_rate for i in range(n_requests)]
-
-    by_machine: dict[int, list[int]] = {m.mid: [] for m in machines}
-    for rid, mid in trace:
-        by_machine[mid].append(rid)
-
-    latency = [0.0] * n_requests
-    per_machine_max: dict[int, float] = {}
+    t = make_arrivals(arrivals, n_requests, total_rate, seed=seed)
+    runs = dispatch_runs(machines, n_requests, policy)
+    rep = replay_module(machines, t, runs, timeout=timeout, tail=tail, method=method)
+    done = rep.done
+    lat = rep.finish[done] - t[done]
+    # group latencies by machine with one stable argsort (hot at 10^6 reqs)
+    order = np.argsort(rep.assignment, kind="stable")
+    sorted_mid = rep.assignment[order]
+    lat_all = rep.finish[order] - t[order]  # NaN where dropped
+    per_machine_max = {}
     for m in machines:
-        rids = by_machine[m.mid]
-        b, d = m.config.batch, m.config.duration
-        free_at = 0.0
-        worst = 0.0
-        for i in range(0, len(rids), b):
-            group = rids[i : i + b]
-            if len(group) < b:
-                break  # incomplete tail batch: not in steady state, drop
-            ready = arrivals[group[-1]]
-            start = max(ready, free_at)
-            finish = start + d
-            free_at = finish
-            for rid in group:
-                lat = finish - arrivals[rid]
-                latency[rid] = lat
-                worst = max(worst, lat)
-        per_machine_max[m.mid] = worst
-    done = [l for l in latency if l > 0]
+        lo = int(np.searchsorted(sorted_mid, m.mid, side="left"))
+        hi = int(np.searchsorted(sorted_mid, m.mid, side="right"))
+        mine = lat_all[lo:hi]
+        mine = mine[~np.isnan(mine)]
+        per_machine_max[m.mid] = float(mine.max()) if mine.size else 0.0
+    n_done = int(done.sum())
     return SimResult(
-        max_latency=max(done) if done else 0.0,
-        mean_latency=sum(done) / len(done) if done else 0.0,
+        max_latency=float(lat.max()) if n_done else 0.0,
+        mean_latency=float(lat.mean()) if n_done else 0.0,
         per_machine_max=per_machine_max,
-        n_requests=len(done),
+        n_requests=n_done,
+        dropped=n_requests - n_done,
+        p99_latency=float(np.quantile(lat, 0.99)) if n_done else 0.0,
+        latencies=lat,
     )

@@ -1,0 +1,90 @@
+"""Arrival-process generators: determinism, sortedness, mean rate, burstiness."""
+import numpy as np
+import pytest
+
+from repro.serving.arrivals import (
+    ARRIVALS,
+    make_arrivals,
+    mmpp_arrivals,
+    poisson_arrivals,
+    trace_arrivals,
+    uniform_arrivals,
+)
+
+KINDS = ("uniform", "poisson", "mmpp", "diurnal")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_deterministic_under_seed(kind):
+    a = make_arrivals(kind, 4000, 80.0, seed=42)
+    b = make_arrivals(kind, 4000, 80.0, seed=42)
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.float64 and a.shape == (4000,)
+    assert np.all(np.diff(a) >= 0)
+
+
+@pytest.mark.parametrize("kind", ("poisson", "mmpp", "diurnal"))
+def test_seed_actually_matters(kind):
+    a = make_arrivals(kind, 2000, 80.0, seed=1)
+    b = make_arrivals(kind, 2000, 80.0, seed=2)
+    assert not np.array_equal(a, b)
+
+
+def test_uniform_exact():
+    t = uniform_arrivals(10, 50.0)
+    np.testing.assert_allclose(t, np.arange(10) / 50.0)
+
+
+def test_poisson_mean_rate():
+    n, rate = 40000, 120.0
+    t = poisson_arrivals(n, rate, seed=5)
+    realized = n / t[-1]
+    assert realized == pytest.approx(rate, rel=0.05)
+
+
+def test_mmpp_mean_rate_and_burstiness():
+    n, rate = 40000, 120.0
+    t = mmpp_arrivals(n, rate, seed=5, mean_dwell=0.5)
+    realized = n / t[-1]
+    assert realized == pytest.approx(rate, rel=0.10)
+    # burstiness: squared coefficient of variation of inter-arrivals well
+    # above the Poisson value of 1
+    gaps = np.diff(t)
+    scv = gaps.var() / gaps.mean() ** 2
+    assert scv > 1.5, scv
+    pois = np.diff(poisson_arrivals(n, rate, seed=5))
+    scv_pois = pois.var() / pois.mean() ** 2
+    assert scv_pois == pytest.approx(1.0, abs=0.2)
+
+
+def test_diurnal_mean_rate_over_full_periods():
+    n, rate = 30000, 150.0  # ~200 s of traffic, 100 periods of 2 s
+    t = trace_arrivals(n, rate, seed=3, period=2.0)
+    assert n / t[-1] == pytest.approx(rate, rel=0.10)
+
+
+def test_trace_profile_from_samples_normalized():
+    # an unnormalized sample trace must still deliver mean `rate`
+    samples = [5.0, 5.0, 0.5, 0.5]
+    n, rate = 30000, 100.0
+    t = trace_arrivals(n, rate, seed=0, profile=samples, period=1.0)
+    assert n / t[-1] == pytest.approx(rate, rel=0.10)
+
+
+def test_explicit_array_passthrough_and_validation():
+    arr = np.array([0.0, 0.5, 1.5])
+    np.testing.assert_array_equal(make_arrivals(arr, 3, 10.0), arr)
+    with pytest.raises(ValueError, match="length"):
+        make_arrivals(arr, 5, 10.0)
+    with pytest.raises(ValueError, match="sorted"):
+        make_arrivals(np.array([1.0, 0.5]), 2, 10.0)
+
+
+def test_unknown_kind_and_bad_params():
+    with pytest.raises(ValueError, match="unknown arrival"):
+        make_arrivals("fractal", 10, 1.0)
+    with pytest.raises(ValueError):
+        poisson_arrivals(10, -1.0)
+    with pytest.raises(ValueError):
+        mmpp_arrivals(10, 1.0, burst=0.5)
+    assert set(KINDS) <= set(ARRIVALS)

@@ -1,0 +1,68 @@
+"""Kahn toposort (`core.dag.topo_sort`): deep/wide DAGs, determinism, cycles."""
+import random
+
+import pytest
+
+from repro.core.dag import AppDAG, Leaf, par, series, topo_sort
+
+
+def _assert_topological(order, nodes, edges):
+    assert sorted(order) == sorted(nodes)
+    pos = {m: i for i, m in enumerate(order)}
+    for u, v in edges:
+        assert pos[u] < pos[v], (u, v)
+
+
+def test_deep_chain():
+    n = 500
+    nodes = [f"m{i}" for i in range(n)]
+    edges = [(f"m{i}", f"m{i+1}") for i in range(n - 1)]
+    shuffled = nodes[:]
+    random.Random(0).shuffle(shuffled)
+    _assert_topological(topo_sort(shuffled, edges), nodes, edges)
+
+
+def test_wide_diamond_deterministic():
+    mid = [f"p{i}" for i in range(300)]
+    nodes = ["src"] + mid + ["sink"]
+    edges = [("src", p) for p in mid] + [(p, "sink") for p in mid]
+    order = topo_sort(nodes, edges)
+    _assert_topological(order, nodes, edges)
+    # among simultaneously-ready nodes, input order is preserved
+    assert order == nodes
+    assert topo_sort(nodes, edges) == order
+
+
+def test_random_layered_dag():
+    rng = random.Random(7)
+    layers = [[f"l{d}_{i}" for i in range(rng.randint(2, 8))] for d in range(12)]
+    nodes = [m for layer in layers for m in layer]
+    edges = []
+    for a, b in zip(layers, layers[1:]):
+        for v in b:
+            for u in rng.sample(a, k=rng.randint(1, len(a))):
+                edges.append((u, v))
+    shuffled = nodes[:]
+    rng.shuffle(shuffled)
+    _assert_topological(topo_sort(shuffled, edges), nodes, edges)
+
+
+def test_cycle_detection():
+    with pytest.raises(ValueError, match="cycle"):
+        topo_sort(["a", "b", "c"], [("a", "b"), ("b", "c"), ("c", "a")])
+    with pytest.raises(ValueError, match="cycle"):
+        topo_sort(["a"], [("a", "a")])
+    # cycle hanging off an acyclic prefix
+    with pytest.raises(ValueError, match="cycle"):
+        topo_sort(["a", "b", "c"], [("a", "b"), ("b", "c"), ("c", "b")])
+
+
+def test_unknown_node_in_edge():
+    with pytest.raises(ValueError, match="unknown"):
+        topo_sort(["a"], [("a", "zz")])
+
+
+def test_appdag_topo_order():
+    app = AppDAG("t", series(Leaf("a"), par(Leaf("b"), Leaf("c")), Leaf("d")))
+    order = app.topo_order()
+    _assert_topological(order, app.modules, app.edges)

@@ -4,6 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX-compile-heavy (jits real kernels/models); deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 from repro.kernels import ref
 from repro.kernels.decode_attention import flash_decode
 from repro.kernels.flash_attention import flash_attention

@@ -3,6 +3,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# JAX-compile-heavy (jits real kernels/models); deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, SHAPES
 from repro.launch.roofline import (
     CollectiveStats,

@@ -4,6 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX-compile-heavy (jits real kernels/models); deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, SMOKE_ARCHS, SHAPES
 from repro.configs.base import LayerSpec
 from repro.data import lm_batches

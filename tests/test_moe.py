@@ -8,6 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX-compile-heavy (jits real kernels/models); deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 from repro.configs import SMOKE_ARCHS
 from repro.models.moe import expert_ffn_local, moe_forward, moe_init, route
 

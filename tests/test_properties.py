@@ -1,6 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Alloc, Policy, generate_config, module_wcl, total_cost

@@ -6,6 +6,9 @@ import textwrap
 import jax
 import pytest
 
+# JAX-compile-heavy (jits real kernels/models); deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, SHAPES
 from repro.launch.shardings import divisibility_fix, param_spec
 from repro.models import Model

@@ -6,6 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX-compile-heavy (jits real kernels/models); deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 from repro.configs import SMOKE_ARCHS
 from repro.data import BigramStream, lm_batches
 from repro.models import Model
