@@ -39,8 +39,17 @@ def normalized_costs(rows, names):
     return out
 
 
-def emit(name: str, us_per_call: float, derived: str):
+# structured copies of every emitted row, for `run.py --json` (BENCH_serving.json)
+RECORDS: list[dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str, **data):
+    """Print one CSV row; ``data`` keyword fields ride along machine-readable."""
     print(f"{name},{us_per_call:.3f},{derived}")
+    rec = {"name": name, "us_per_call": round(us_per_call, 3), "derived": derived}
+    if data:
+        rec["data"] = data
+    RECORDS.append(rec)
 
 
 def timed(fn, *args, repeat: int = 3):

@@ -5,10 +5,13 @@ metric compared against the paper's claim).
 
   PYTHONPATH=src python -m benchmarks.run           # all benches
   PYTHONPATH=src python -m benchmarks.run --only fig5 --n 300
+  PYTHONPATH=src python -m benchmarks.run --only replay,slo_sweep,shed_sweep --json
+    # also writes machine-readable BENCH_serving.json (serving trajectory)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import math
 import statistics
 import sys
@@ -25,6 +28,7 @@ from repro.core.profiles import TABLE1_M3  # noqa: E402
 from repro.core.scheduler import generate_config, generate_config_ktuple  # noqa: E402
 from repro.core.residual import apply_dummy  # noqa: E402
 from repro.serving import ServingEngine, simulate, simulate_reference  # noqa: E402
+from repro.serving.frontend import FrontendConfig, QueueDepth, TokenBucket  # noqa: E402
 from repro.workloads.apps import FANOUT  # noqa: E402
 
 
@@ -229,6 +233,65 @@ def bench_slo_sweep(n: int) -> None:
                 us,
                 f"attain={finite_mean(att):.3f}|p99/slo={finite_mean(p99s):.3f}"
                 f"|workloads={planned[p.name]}/{len(wls)}",
+                preset=p.name,
+                arrivals=k,
+                attain=round(finite_mean(att), 4),
+                p99_over_slo=round(finite_mean(p99s), 4),
+                workloads=planned[p.name],
+            )
+
+
+def bench_shed_sweep(n: int) -> None:
+    """Admission control under bursty overload: drive feasible Harpagon plans
+    with MMPP arrivals at 1.0x / 1.3x the provisioned rate and compare the
+    frontend policies.  Without admission the PR-1 queues (and p99) grow with
+    the run length; token-bucket / queue-depth shedding bounds p99 at the
+    price of an explicit, reported shed rate."""
+    wls = workload_suite(max(60, min(n, 120)))
+    fes = (
+        ("none", FrontendConfig(dummies=True)),
+        ("token_bucket", FrontendConfig(dummies=True, admission=TokenBucket(burst=4))),
+        ("queue_depth", FrontendConfig(dummies=True, admission=QueueDepth(depth=8))),
+    )
+    loads = (1.0, 1.3)
+    acc = {(a, l): ([], [], []) for a, _ in fes for l in loads}  # att, p99, shed
+    planned = 0
+    t0 = time.perf_counter()
+    for wl in wls:
+        frame_rate = wl.rates[wl.app.modules[0]] / FANOUT[wl.app.name][wl.app.modules[0]]
+        plan = Planner(B.HARPAGON).plan(wl, PROFILES)
+        if not plan.feasible:
+            continue
+        planned += 1
+        eng = ServingEngine(plan)
+        for name, fe in fes:
+            for load in loads:
+                res = eng.run(
+                    600, frame_rate, arrivals="mmpp", seed=0,
+                    timeout="budget", frontend=fe,
+                    offered_rate=load * frame_rate,
+                )
+                att, p99s, sheds = acc[(name, load)]
+                att.append(res.attainment)
+                p99s.append(res.p99 / wl.slo)
+                sheds.append(res.shed / max(1, res.offered))
+        if planned >= 40:
+            break
+    us = (time.perf_counter() - t0) * 1e6 / max(1, planned)
+    for name, _ in fes:
+        for load in loads:
+            att, p99s, sheds = acc[(name, load)]
+            emit(
+                f"shed_sweep_{name}_{load:g}x",
+                us,
+                f"attain={finite_mean(att):.3f}|p99/slo={finite_mean(p99s):.3f}"
+                f"|shed={100*finite_mean(sheds):.1f}%|workloads={planned}",
+                admission=name,
+                load=load,
+                attain=round(finite_mean(att), 4),
+                p99_over_slo=round(finite_mean(p99s), 4),
+                shed_rate=round(finite_mean(sheds), 4),
+                workloads=planned,
             )
 
 
@@ -254,6 +317,11 @@ def bench_replay_speed(n: int) -> None:
         t_vec * 1e6,
         f"python={t_ref:.2f}s|vectorized={t_vec:.3f}s|speedup={t_ref / t_vec:.1f}x"
         f"|n=1e6|agree={agree}|target>=5x",
+        python_s=round(t_ref, 4),
+        vectorized_s=round(t_vec, 4),
+        speedup=round(t_ref / t_vec, 2),
+        n_requests=n_req,
+        agree=bool(agree),
     )
 
 
@@ -290,21 +358,50 @@ BENCHES = {
     "fig7sim": bench_fig7_simulation,
     "fig8": bench_fig8_multiconfig,
     "slo_sweep": bench_slo_sweep,
+    "shed_sweep": bench_shed_sweep,
     "replay": bench_replay_speed,
     "runtime": bench_runtime,
 }
+
+# serving-subsystem rows tracked across PRs by `--json` (BENCH_serving.json)
+_SERVING_PREFIXES = ("replay_", "slo_sweep_", "shed_sweep_")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--n", type=int, default=1131)
+    ap.add_argument(
+        "--json",
+        nargs="?",
+        const="BENCH_serving.json",
+        default=None,
+        metavar="PATH",
+        help="write serving-bench rows (replay speedup, SLO sweep, shed-rate "
+        "sweep) as machine-readable JSON (default path: BENCH_serving.json)",
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and name not in args.only.split(","):
             continue
         fn(args.n)
+    if args.json:
+        rows = [
+            r for r in common.RECORDS if r["name"].startswith(_SERVING_PREFIXES)
+        ]
+        if rows:
+            with open(args.json, "w") as f:
+                json.dump({"benches": rows}, f, indent=2)
+                f.write("\n")
+            print(f"# wrote {len(rows)} serving rows to {args.json}", file=sys.stderr)
+        else:
+            # don't clobber a tracked trajectory file with an empty record
+            print(
+                f"# no serving benches ran (need one of: replay, slo_sweep, "
+                f"shed_sweep); {args.json} left untouched",
+                file=sys.stderr,
+            )
 
 
 if __name__ == "__main__":

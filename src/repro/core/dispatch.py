@@ -45,12 +45,20 @@ class Alloc:
     ``dummy`` is phantom request rate injected by the frontend (dummy
     generator / dummy-filled residual): it raises the batch-collection rate
     (and the machine count paid for) without carrying real traffic.
+
+    ``derate`` is the utilization-headroom factor the scheduler provisioned
+    under: each machine is assigned only ``derate * throughput`` traffic, so
+    its run period ``b / (derate * t) = d / derate`` leaves slack for
+    timeout-flushed partial batches (``derate == 1`` = paper semantics, zero
+    slack).  The invariant ``rate + dummy == machines * derate * throughput``
+    holds for scheduler-produced allocations.
     """
 
     config: Config
     machines: float
-    rate: float  # real request rate (machines * throughput - dummy)
+    rate: float  # real request rate (machines * derate * throughput - dummy)
     dummy: float = 0.0
+    derate: float = 1.0
 
     @property
     def cost(self) -> float:
@@ -60,6 +68,11 @@ class Alloc:
     @property
     def full(self) -> bool:
         return self.machines >= 1.0 - 1e-12
+
+    @property
+    def cap(self) -> float:
+        """Per-machine assigned capacity under headroom derating."""
+        return self.config.throughput * self.derate
 
     @property
     def collect_rate(self) -> float:
@@ -73,7 +86,8 @@ class Alloc:
 
     def __repr__(self) -> str:
         dm = f"+{self.dummy:.3g}dum" if self.dummy else ""
-        return f"{self.rate:.6g}{dm} ({self.machines:.3g} x b{self.config.batch}@{self.config.hardware})"
+        hr = f" util<={self.derate:.2g}" if self.derate < 1.0 - 1e-12 else ""
+        return f"{self.rate:.6g}{dm} ({self.machines:.3g} x b{self.config.batch}@{self.config.hardware}{hr})"
 
 
 def total_cost(allocs: list[Alloc]) -> float:
@@ -127,9 +141,13 @@ def module_wcl(allocs: list[Alloc], policy: Policy) -> float:
         elif policy in (Policy.RR, Policy.DT):
             # the tail machine of a fractional alloc collects at its own rate
             frac = a.machines - math.floor(a.machines)
-            lat = config_wcl(a.config, policy, collect_rate=a.config.throughput)
+            if a.derate < 1.0 - 1e-12:
+                # headroom-derated machine: collects at its assigned capacity
+                lat = config_wcl(a.config, policy, collect_rate=a.cap, full=False)
+            else:
+                lat = config_wcl(a.config, policy, collect_rate=a.config.throughput)
             if frac > 1e-12:
-                tail_rate = frac * a.config.throughput + a.dummy
+                tail_rate = frac * a.cap + a.dummy
                 lat = max(
                     lat,
                     config_wcl(
@@ -157,17 +175,23 @@ class Machine:
 
 
 def expand_machines(allocs: list[Alloc]) -> list[Machine]:
-    """Expand allocations to individual machines, ratio-descending order."""
+    """Expand allocations to individual machines, ratio-descending order.
+
+    Each machine's assigned rate is the alloc's per-machine capacity
+    ``derate * throughput`` (== throughput without headroom); the fractional
+    tail machine carries the fractional share of that capacity.
+    """
     machines: list[Machine] = []
     mid = 0
     for a in sorted(allocs, key=lambda x: -x.eff_ratio):
+        cap = a.cap
         n_full = math.floor(a.machines + 1e-12)
         for _ in range(n_full):
-            machines.append(Machine(mid, a.config, a.config.throughput))
+            machines.append(Machine(mid, a.config, cap))
             mid += 1
         frac = a.machines - n_full
         if frac > 1e-9:
-            machines.append(Machine(mid, a.config, frac * a.config.throughput))
+            machines.append(Machine(mid, a.config, frac * cap))
             mid += 1
     return machines
 

@@ -39,6 +39,9 @@ class PlannerOptions:
     reassign: int = 10 ** 6              # max reassigner iterations (0 / 1 / many)
     hardware: str | None = None          # None=all, "cheapest", "most_expensive"
     max_batch: int | None = None         # 1 => batching disabled (Harp-nb)
+    headroom: float = 0.0                # provision machines at t*(1-headroom):
+    #   slack absorbs timeout-flushed partial batches (multi-tuple scheduler
+    #   only; 0.0 = paper's zero-slack pacing).  Costs ~1/(1-headroom) more.
 
 
 @dataclass(frozen=True)
@@ -62,10 +65,11 @@ class Plan:
         return self.workload.app.latency({m: s.wcl for m, s in self.schedules.items()})
 
     def summary(self) -> str:
+        hr = f" headroom={self.options.headroom:g}" if self.options.headroom else ""
         lines = [
             f"plan[{self.options.name}] app={self.workload.app.name} slo={self.workload.slo}"
             f" feasible={self.feasible} cost={self.cost:.4g} e2e={self.e2e_latency:.4g}"
-            f" runtime={self.runtime_s * 1e3:.2f}ms"
+            f"{hr} runtime={self.runtime_s * 1e3:.2f}ms"
         ]
         for m, s in self.schedules.items():
             dummy = f" dummy={s.dummy:.3g}" if s.dummy else ""
@@ -177,6 +181,7 @@ class Planner:
                 o.policy,
                 use_dummy=o.use_dummy and o.k_tuples is None,
                 k_tuples=o.k_tuples,
+                headroom=o.headroom,
             )
             if s is None and gap > _EPS:
                 # fallback: spend the global slack on this module's budget
@@ -188,6 +193,7 @@ class Planner:
                     o.policy,
                     use_dummy=o.use_dummy and o.k_tuples is None,
                     k_tuples=o.k_tuples,
+                    headroom=o.headroom,
                 )
                 if s is not None:
                     gap = max(0.0, gap - max(0.0, s.wcl - budgets[m]))
@@ -218,7 +224,8 @@ class Planner:
             best: tuple[float, str, ModuleSchedule] | None = None
             for m, s in schedules.items():
                 new_allocs, _over = apply_reassign(
-                    s.rate + s.dummy, s.budget, gap, profiles[m], list(s.allocs), o.policy
+                    s.rate + s.dummy, s.budget, gap, profiles[m], list(s.allocs),
+                    o.policy, headroom=o.headroom,
                 )
                 cand = replace(s, allocs=tuple(new_allocs))
                 dcost = s.cost - cand.cost

@@ -59,16 +59,18 @@ def apply_dummy(
     profile: ModuleProfile,
     allocs: list[Alloc],
     policy: Policy,
+    *,
+    headroom: float = 0.0,
 ) -> tuple[float, list[Alloc]]:
     """Try Theorem-2 dummy padding; returns (dummy_rate, allocs) of the best result."""
     best_cost = total_cost(allocs)
     best = (0.0, allocs)
     for a, u in zip(allocs, leftover_workloads(allocs)):
-        t_i = a.config.throughput
+        t_i = a.cap  # per-machine assigned capacity (headroom-derated)
         dum = t_i - u
         if dum <= _EPS or u <= _EPS:
             continue  # nothing below this config, or already saturated
-        ok, cand = generate_config(T + dum, L, profile, policy)
+        ok, cand = generate_config(T + dum, L, profile, policy, headroom=headroom)
         if ok and total_cost(cand) < best_cost - 1e-12:
             best_cost = total_cost(cand)
             best = (dum, cand)
@@ -82,6 +84,8 @@ def apply_reassign(
     profile: ModuleProfile,
     allocs: list[Alloc],
     policy: Policy,
+    *,
+    headroom: float = 0.0,
 ) -> tuple[list[Alloc], float]:
     """Re-run Algorithm 1 on the residual workload with budget ``L + extra``.
 
@@ -96,7 +100,7 @@ def apply_reassign(
     if residual_rate <= _EPS:
         return allocs, 0.0
     base_cost = total_cost(allocs)
-    ok, cand = generate_config(residual_rate, L + extra, profile, policy)
+    ok, cand = generate_config(residual_rate, L + extra, profile, policy, headroom=headroom)
     if not ok:
         return allocs, 0.0
     new_allocs = [majority] + cand
@@ -116,17 +120,23 @@ def schedule_module(
     *,
     use_dummy: bool = True,
     k_tuples: int | None = None,
+    headroom: float = 0.0,
 ) -> ModuleSchedule | None:
-    """Algorithm 1 (+ optional dummy generator) for one module."""
+    """Algorithm 1 (+ optional dummy generator) for one module.
+
+    ``headroom`` (utilization slack, multi-tuple scheduler only) provisions
+    machines at ``(1 - headroom) * throughput``; the k-tuple baselines ignore
+    it (they model prior systems' zero-slack provisioning).
+    """
     from .scheduler import generate_config_ktuple  # local: avoid cycle
 
     if k_tuples is None:
-        ok, allocs = generate_config(T, L, profile, policy)
+        ok, allocs = generate_config(T, L, profile, policy, headroom=headroom)
     else:
         ok, allocs = generate_config_ktuple(T, L, profile, policy, k_tuples)
     if not ok:
         return None
     dummy = 0.0
     if use_dummy and k_tuples is None:
-        dummy, allocs = apply_dummy(T, L, profile, allocs, policy)
+        dummy, allocs = apply_dummy(T, L, profile, allocs, policy, headroom=headroom)
     return ModuleSchedule(module, T, dummy, L, tuple(allocs), policy)

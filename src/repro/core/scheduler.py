@@ -22,13 +22,26 @@ from .profiles import Config, ModuleProfile
 _EPS = 1e-9
 
 
-def get_wcl(config: Config, policy: Policy, rw: float, *, full: bool) -> float:
-    """L_wc estimate for a machine at ``config`` when ``rw`` workload remains."""
+def get_wcl(
+    config: Config, policy: Policy, rw: float, *, full: bool, headroom: float = 0.0
+) -> float:
+    """L_wc estimate for a machine at ``config`` when ``rw`` workload remains.
+
+    With ``headroom`` > 0 a full machine is only assigned
+    ``(1 - headroom) * throughput`` traffic, so under RR/DT it collects at
+    that derated capacity instead of its own throughput (TC collection is the
+    remaining *real* workload either way — Theorem 1 is headroom-invariant).
+    """
     if policy is Policy.TC:
         return config_wcl(config, policy, collect_rate=rw)
     if policy in (Policy.RR, Policy.DT):
         # sound model: full machines collect at their own throughput (2d);
         # partial machines cannot collect faster than their assigned rate.
+        if headroom > 0.0:
+            cap = config.throughput * (1.0 - headroom)
+            return config_wcl(
+                config, policy, collect_rate=(cap if full else min(rw, cap)), full=False
+            )
         rate = config.throughput if full else rw
         return config_wcl(config, policy, collect_rate=rate, full=full)
     return config_wcl(config, policy, collect_rate=config.throughput)  # DT_OPT
@@ -38,7 +51,7 @@ def _merge(allocs: list[Alloc]) -> list[Alloc]:
     """Merge adjacent allocations that share a configuration."""
     out: list[Alloc] = []
     for a in allocs:
-        if out and out[-1].config == a.config:
+        if out and out[-1].config == a.config and out[-1].derate == a.derate:
             prev = out.pop()
             out.append(
                 Alloc(
@@ -46,6 +59,7 @@ def _merge(allocs: list[Alloc]) -> list[Alloc]:
                     prev.machines + a.machines,
                     prev.rate + a.rate,
                     prev.dummy + a.dummy,
+                    derate=a.derate,
                 )
             )
         else:
@@ -58,10 +72,23 @@ def generate_config(
     L: float,
     profile: ModuleProfile,
     policy: Policy = Policy.TC,
+    *,
+    headroom: float = 0.0,
 ) -> tuple[bool, list[Alloc]]:
-    """Paper Algorithm 1: greedy multi-tuple configuration generation."""
+    """Paper Algorithm 1: greedy multi-tuple configuration generation.
+
+    ``headroom`` provisions machines at ``throughput * (1 - headroom)``: the
+    same real workload is spread over proportionally more machines, so each
+    machine's batch run period carries slack for timeout-flushed partial
+    batches (the paper's zero-slack pacing permanently loses throughput to
+    any partial flush).  Feasibility is still checked against the *real*
+    collection rates, so the WCL model stays honest.
+    """
+    if not 0.0 <= headroom < 1.0:
+        raise ValueError(f"headroom must be in [0, 1), got {headroom}")
     if T <= _EPS:
         return True, []
+    derate = 1.0 - headroom
     rw = T
     allocs: list[Alloc] = []
     k = 0
@@ -70,18 +97,19 @@ def generate_config(
         return False, []
     c = configs[k]
     while rw > _EPS:
-        n = rw / c.throughput
+        cap = c.throughput * derate
+        n = rw / cap
         full = n >= 1.0 - 1e-12
-        if get_wcl(c, policy, rw, full=full) <= L + _EPS:
+        if get_wcl(c, policy, rw, full=full, headroom=headroom) <= L + _EPS:
             if full:
                 nfull = math.floor(n + 1e-12)
-                allocs.append(Alloc(c, float(nfull), nfull * c.throughput))
-                rw -= nfull * c.throughput
+                allocs.append(Alloc(c, float(nfull), nfull * cap, derate=derate))
+                rw -= nfull * cap
                 if rw < _EPS:
                     rw = 0.0
                 # loop re-checks the same c against the smaller rw
             else:
-                allocs.append(Alloc(c, n, rw))
+                allocs.append(Alloc(c, n, rw, derate=derate))
                 rw = 0.0
         else:
             k += 1
@@ -91,7 +119,7 @@ def generate_config(
                 # back to DUMMY-FILLING one machine: the frontend pads the
                 # residual to a full machine's throughput, so the batch
                 # collects at rate t (L_wc = 2d) at the price of one machine.
-                fill = _dummy_fill(rw, L, configs, policy)
+                fill = _dummy_fill(rw, L, configs, policy, headroom=headroom)
                 if fill is None:
                     return False, []
                 allocs.append(fill)
@@ -101,19 +129,22 @@ def generate_config(
     return True, _merge(allocs)
 
 
-def _dummy_fill(rw: float, L: float, configs, policy: Policy) -> Alloc | None:
+def _dummy_fill(
+    rw: float, L: float, configs, policy: Policy, *, headroom: float = 0.0
+) -> Alloc | None:
     """Cheapest single machine that can carry ``rw`` when padded with dummies."""
+    derate = 1.0 - headroom
     best = None
     for c in configs:
-        if c.throughput < rw - _EPS:
+        if c.throughput * derate < rw - _EPS:
             continue
-        if get_wcl(c, policy, c.throughput, full=True) > L + _EPS:
+        if get_wcl(c, policy, c.throughput * derate, full=True, headroom=headroom) > L + _EPS:
             continue
         if best is None or c.unit_price < best.unit_price:
             best = c
     if best is None:
         return None
-    return Alloc(best, 1.0, rw, dummy=best.throughput - rw)
+    return Alloc(best, 1.0, rw, dummy=best.throughput * derate - rw, derate=derate)
 
 
 def _cover_with_config(

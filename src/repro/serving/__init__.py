@@ -1,3 +1,48 @@
+"""Unified event-driven serving subsystem.
+
+Layers, ingress to silicon:
+
+* ``arrivals``  — seeded open-loop arrival processes (uniform / poisson /
+  bursty MMPP / diurnal trace).
+* ``frontend``  — the overload-aware serving frontend: dummy-request
+  streaming (the plan's priced phantom traffic joins batch formation, never
+  the statistics), admission control (token-bucket / queue-depth shedding at
+  ingress, per-app policies), and closed-loop clients (bounded in-flight
+  frames, jittered retry-on-shed) as an alternative to open-loop arrivals.
+* ``events``    — priority-queue discrete-event core with real tail-batch
+  deadline semantics; reference implementation, supports real executors.
+* ``replay``    — numpy-vectorized per-machine replay kernel (the hot path),
+  property-tested against the event core.
+* ``engine``    — DAG-level adapter executing a Harpagon ``Plan`` over a
+  frame stream (fanout expansion, per-module dispatch, e2e accounting).
+* ``simulator`` — module-level Theorem-1 validation harness.
+* ``reference`` — the frozen seed loops (golden equivalence baselines).
+
+Frontend usage sketch::
+
+    from repro.serving import ServingEngine
+    from repro.serving.frontend import (
+        ClosedLoopClients, FrontendConfig, TokenBucket,
+    )
+
+    # stream dummy traffic so a dummy-padded plan meets its modeled WCL
+    fe = FrontendConfig(dummies=True)
+    ServingEngine(plan).run(2000, rate, timeout="budget", frontend=fe)
+
+    # shed at ingress under MMPP overload: bounded p99, reported shed rate
+    fe = FrontendConfig(admission=TokenBucket(burst=4))
+    r = ServingEngine(plan).run(
+        2000, rate, arrivals="mmpp", offered_rate=1.3 * rate, frontend=fe
+    )
+    r.shed, r.attainment, r.p99   # shed frames count as SLO misses
+
+    # closed-loop clients: offered load self-throttles under overload
+    fe = FrontendConfig(clients=ClosedLoopClients(n_clients=16, retry_on_shed=True))
+    ServingEngine(plan).run(2000, rate, frontend=fe)
+
+The default path (no frontend, open-loop arrivals, ``timeout=None``)
+reproduces the seed engine numbers exactly (`tests/test_golden_equivalence`).
+"""
 from .arrivals import (
     ARRIVALS,
     make_arrivals,
@@ -8,19 +53,31 @@ from .arrivals import (
 )
 from .engine import ModuleStats, ServeResult, ServingEngine
 from .events import simulate_module_events
+from .frontend import (
+    ClosedLoopClients,
+    FrontendConfig,
+    QueueDepth,
+    TokenBucket,
+    make_admission,
+)
 from .replay import ModuleReplay, expand_fanout, replay_machine, replay_module
 from .reference import engine_run_reference, simulate_reference
 from .simulator import SimResult, simulate
 
 __all__ = [
     "ARRIVALS",
+    "ClosedLoopClients",
+    "FrontendConfig",
     "ModuleReplay",
     "ModuleStats",
+    "QueueDepth",
     "ServeResult",
     "ServingEngine",
     "SimResult",
+    "TokenBucket",
     "engine_run_reference",
     "expand_fanout",
+    "make_admission",
     "make_arrivals",
     "mmpp_arrivals",
     "poisson_arrivals",

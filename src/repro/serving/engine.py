@@ -18,6 +18,14 @@ flush when their opener has waited that long — mid-stream under bursty
 arrivals and at end of stream.  The default (``timeout=None, tail="flush"``)
 reproduces the seed engine's numbers on uniform arrivals exactly (see
 `repro.serving.reference`).
+
+The optional *frontend* (`repro.serving.frontend`) sits between arrivals and
+dispatch: it streams the plan's priced dummy traffic as phantom requests
+(excluded from all statistics, counted in batch fill), sheds frames at
+ingress under an admission policy, and can replace the open-loop arrival
+process with closed-loop clients.  ``run(..., offered_rate=...)`` drives the
+plan past its provisioned rate while keeping the provisioned fanout — the
+honest overload experiment the frontend exists for.
 """
 from __future__ import annotations
 
@@ -32,6 +40,9 @@ from ..core.dispatch import Machine, Policy, dispatch_runs, expand_machines
 from ..core.harpagon import Plan
 from .arrivals import make_arrivals
 from .events import simulate_module_events
+from .frontend import FrontendConfig, make_admission
+from .frontend.clients import closed_loop_ingress
+from .frontend.dummy import merge_phantoms, phantom_times
 from .replay import ModuleReplay, expand_fanout, replay_module, runs_to_assignment
 
 
@@ -40,6 +51,7 @@ class ModuleStats:
     latencies: list[float] = field(default_factory=list)
     batches: int = 0
     dropped: int = 0
+    phantom: int = 0  # frontend dummy requests streamed through this module
 
     @property
     def max_latency(self) -> float:
@@ -51,18 +63,30 @@ class ServeResult:
     e2e_latencies: list[float]
     module_stats: dict[str, ModuleStats]
     slo: float
+    shed: int = 0      # frames rejected at ingress by the admission controller
+    dropped: int = 0   # admitted frames lost mid-pipeline (tail drops etc.)
+    attempts: int = 0  # closed-loop issue attempts incl. retries (0 = open loop)
+
+    @property
+    def offered(self) -> int:
+        """Total frames offered to the system: completed + shed + dropped."""
+        return len(self.e2e_latencies) + self.shed + self.dropped
 
     @property
     def attainment(self) -> float:
-        if not self.e2e_latencies:
+        """SLO attainment over *offered* frames: a shed or dropped frame is a
+        miss, not a statistical no-show (an all-shed run attains 0.0)."""
+        total = self.offered
+        if total == 0:
             return 1.0
         ok = sum(1 for l in self.e2e_latencies if l <= self.slo + 1e-9)
-        return ok / len(self.e2e_latencies)
+        return ok / total
 
     @property
     def p99(self) -> float:
-        s = sorted(self.e2e_latencies)
-        return s[int(0.99 * (len(s) - 1))] if s else 0.0
+        if not self.e2e_latencies:
+            return 0.0
+        return float(np.quantile(np.asarray(self.e2e_latencies), 0.99))
 
 
 class ServingEngine:
@@ -88,12 +112,119 @@ class ServingEngine:
         seed: int = 0,
         timeout: "float | str | None" = None,
         tail: str = "flush",
+        frontend: FrontendConfig | None = None,
+        offered_rate: float | None = None,
     ) -> ServeResult:
+        """Serve ``n_frames`` frames arriving at ``offered_rate`` (default:
+        the provisioned ``frame_rate``) through the planned DAG.
+
+        ``frame_rate`` stays the *provisioned* rate: it fixes the per-module
+        fanout and the admission controller's default budget, so passing
+        ``offered_rate > frame_rate`` drives the plan into overload without
+        silently rescaling the workload shape.  ``frontend`` enables dummy
+        streaming / admission control / closed-loop clients (`FrontendConfig`);
+        with ``frontend.clients`` set the ``arrivals`` process is ignored —
+        issue times come from the client loop.
+        """
+        fe = frontend or FrontendConfig()
         wl: Workload = self.plan.workload
-        arrival = make_arrivals(arrivals, n_frames, frame_rate, seed=seed)
+        ctrl = make_admission(fe.admission, wl.app.name, frame_rate)
+        if fe.clients is not None:
+            return self._run_closed_loop(
+                n_frames, frame_rate, fe, ctrl,
+                seed=seed, timeout=timeout, tail=tail,
+                offered_rate=offered_rate,
+            )
+        if offered_rate is not None and offered_rate <= 0:
+            raise ValueError("offered_rate must be positive")
+        arrival = make_arrivals(
+            arrivals, n_frames,
+            offered_rate if offered_rate is not None else frame_rate,
+            seed=seed,
+        )
+        if ctrl is not None:
+            ctrl.reset()
+            shed_mask = ctrl.shed_stream(arrival)
+        else:
+            shed_mask = np.zeros(n_frames, dtype=bool)
+        result, _ = self._serve(
+            arrival, shed_mask, frame_rate, fe, timeout=timeout, tail=tail
+        )
+        return result
+
+    def _run_closed_loop(
+        self,
+        n_frames: int,
+        frame_rate: float,
+        fe: FrontendConfig,
+        ctrl,
+        *,
+        seed: int,
+        timeout: "float | str | None",
+        tail: str,
+        offered_rate: float | None,
+    ) -> ServeResult:
+        """Fixed point of (client ingress -> DAG replay -> latency oracle).
+
+        The ingress simulation needs each frame's end-to-end latency to know
+        when its client slot frees; the DAG replay needs the arrival times.
+        Successive substitution from the plan's modeled latency converges in
+        a few iterations (under overload the closed loop self-throttles, so
+        latencies barely move between rounds).
+        """
+        wl = self.plan.workload
+        clients = fe.clients
+        est0 = self.plan.e2e_latency
+        if not np.isfinite(est0) or est0 <= 0.0:
+            est0 = wl.slo
+        if offered_rate is not None and offered_rate <= 0:
+            raise ValueError("offered_rate must be positive")
+        est = np.full(n_frames, max(est0, 1e-6))
+        pace = offered_rate if offered_rate is not None else frame_rate
+        result = ServeResult([], {}, wl.slo)
+        prev_arrival: np.ndarray | None = None
+        for _ in range(max(1, clients.max_iters)):
+            if ctrl is not None:
+                ctrl.reset()
+            arrival, shed_mask, attempts = closed_loop_ingress(
+                clients, n_frames, pace, est, admission=ctrl, seed=seed
+            )
+            result, lat = self._serve(
+                arrival, shed_mask, frame_rate, fe, timeout=timeout, tail=tail
+            )
+            result.attempts = attempts
+            est = np.where(np.isfinite(lat), lat, est)
+            if (
+                prev_arrival is not None
+                and float(np.max(np.abs(arrival - prev_arrival))) < clients.tol
+            ):
+                break
+            prev_arrival = arrival
+        return result
+
+    def _serve(
+        self,
+        arrival: np.ndarray,
+        shed_mask: np.ndarray,
+        frame_rate: float,
+        fe: FrontendConfig,
+        *,
+        timeout: "float | str | None",
+        tail: str,
+    ) -> tuple[ServeResult, np.ndarray]:
+        """Replay the DAG over admitted frames; returns the result plus the
+        per-frame e2e latency array (NaN for shed/dropped frames)."""
+        wl: Workload = self.plan.workload
+        arrival = np.asarray(arrival, dtype=np.float64)
+        n_frames = arrival.size
         # finish time of frame i at module m (0.0 = not processed / dropped)
         finish_at = {m: np.zeros(n_frames) for m in wl.app.modules}
         stats = {m: ModuleStats() for m in wl.app.modules}
+        # a frame is *lost* when some module materialized instances for it
+        # but completed none (tail drop / deadline overrun) — as opposed to a
+        # frame a fanout < 1 module legitimately skipped, which the seed
+        # semantics exclude from the statistics entirely
+        lost = np.zeros(n_frames, dtype=bool)
         for m in topo_sort(wl.app.modules, wl.app.edges):
             parents = wl.app.parents(m)
             if parents:
@@ -101,21 +232,32 @@ class ServingEngine:
                 ready = np.maximum(arrival, pf.max(axis=0))
                 drop = (pf <= 0.0).any(axis=0)
             else:
-                ready = np.asarray(arrival, dtype=np.float64)
-                drop = np.zeros(n_frames, dtype=bool)
+                ready = arrival
+                drop = shed_mask
             fanout = wl.rates[m] / frame_rate
             self._run_module(
-                m, ready, drop, fanout, finish_at[m], stats[m],
-                timeout=timeout, tail=tail,
+                m, ready, drop, fanout, finish_at[m], stats[m], lost,
+                timeout=timeout, tail=tail, dummies=fe.dummies,
             )
         sinks = [m for m in wl.app.modules if not wl.app.children(m)]
         sf = np.stack([finish_at[s] for s in sinks])
         ok = (sf > 0).all(axis=0)
-        e2e = (sf.max(axis=0) - arrival)[ok]
-        return ServeResult(e2e.tolist(), stats, wl.slo)
+        lat = np.where(ok, sf.max(axis=0) - arrival, np.nan)
+        e2e = lat[ok]
+        shed = int(shed_mask.sum())
+        dropped = int((lost & ~shed_mask & ~ok).sum())
+        return (
+            ServeResult(e2e.tolist(), stats, wl.slo, shed=shed, dropped=dropped),
+            lat,
+        )
 
     def _module_timeout(
-        self, m: str, machines: "list[Machine]", timeout: "float | str | None"
+        self,
+        m: str,
+        machines: "list[Machine]",
+        timeout: "float | str | None",
+        *,
+        dummies: bool = False,
     ) -> "float | None | dict[int, float]":
         """Resolve the batch-collection deadline for module ``m``.
 
@@ -127,6 +269,14 @@ class ServingEngine:
             return timeout
         if timeout == "budget":
             s = self.plan.schedules[m]
+            if dummies:
+                # the frontend streams the plan's dummy traffic, so batches
+                # collect at the provisioned rate and the deadline can sit
+                # exactly at the modeled budget
+                return {
+                    mm.mid: max(s.budget - mm.config.duration, 0.0)
+                    for mm in machines
+                }
             # floor at the real-rate fill time: dummy-padded plans assume the
             # frontend injects phantom requests to speed collection, which the
             # engine does not simulate — flushing faster than real traffic can
@@ -154,9 +304,11 @@ class ServingEngine:
         fanout: float,
         finish_frame: np.ndarray,
         stats: ModuleStats,
+        lost: np.ndarray,
         *,
         timeout: "float | str | None",
         tail: str,
+        dummies: bool = False,
     ) -> None:
         sched = self.plan.schedules[m]
         machines = expand_machines(list(sched.allocs))
@@ -169,11 +321,23 @@ class ServingEngine:
         if n == 0:
             return
         ready_inst = ready[instances]
-        runs = dispatch_runs(machines, n, self.policy)
-        w = self._module_timeout(m, machines, timeout)
+        phantom = np.zeros(n, dtype=bool)
+        ready_all = ready_inst
+        if dummies:
+            # stream the plan's priced dummy traffic: pad the observed real
+            # rate up to the provisioned collection rate with phantoms
+            target = sum(a.rate + a.dummy for a in sched.allocs)
+            ph = phantom_times(ready_inst, target)
+            if ph.size:
+                ready_all, phantom = merge_phantoms(ready_inst, ph)
+        n_all = ready_all.size
+        runs = dispatch_runs(machines, n_all, self.policy)
+        w = self._module_timeout(m, machines, timeout, dummies=dummies)
         ex = self.executors.get(m)
         if ex is None:
-            rep = replay_module(machines, ready_inst, runs, timeout=w, tail=tail)
+            rep = replay_module(
+                machines, ready_all, runs, timeout=w, tail=tail, phantom=phantom
+            )
         else:
             def _measured(machine: Machine, _group: int) -> float:
                 t0 = time.perf_counter()
@@ -182,16 +346,28 @@ class ServingEngine:
 
             finish, batches = simulate_module_events(
                 machines,
-                ready_inst,
-                runs_to_assignment(runs, n),
+                ready_all,
+                runs_to_assignment(runs, n_all),
                 timeout=w,
                 tail=tail,
                 executor=_measured,
+                phantom=phantom,
             )
-            rep = ModuleReplay(finish, runs_to_assignment(runs, n), batches)
-        done = rep.done
+            rep = ModuleReplay(finish, runs_to_assignment(runs, n_all), batches, phantom)
+        # phantoms fill batches but never enter the statistics; the stable
+        # merge preserved real-request order, so slicing by the mask aligns
+        # the finish times back with ``ready_inst`` / ``instances``
+        finish_real = rep.finish[~phantom]
+        done = ~np.isnan(finish_real)
         stats.batches += rep.n_batches
+        stats.phantom += int(phantom.sum())
         stats.dropped += int(n - done.sum())
-        stats.latencies.extend((rep.finish[done] - ready_inst[done]).tolist())
+        stats.latencies.extend((finish_real[done] - ready_inst[done]).tolist())
         # frame finish = max over its instances (dropped instances contribute 0)
-        np.maximum.at(finish_frame, instances[done], rep.finish[done])
+        np.maximum.at(finish_frame, instances[done], finish_real[done])
+        # frames that had instances here but completed none are lost, not
+        # merely skipped by fanout — they count as pipeline drops
+        if not done.all():
+            had = np.zeros(finish_frame.size, dtype=bool)
+            had[instances] = True
+            lost |= had & (finish_frame <= 0.0)

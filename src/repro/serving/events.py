@@ -44,6 +44,7 @@ def simulate_module_events(
     timeout: "float | None | Mapping[int, float]" = None,
     tail: str = "flush",
     executor: Callable[[Machine, int], float] | None = None,
+    phantom: np.ndarray | None = None,
 ) -> tuple[np.ndarray, dict[int, int]]:
     """Simulate one module; returns ``(finish, batches_per_machine)``.
 
@@ -53,6 +54,12 @@ def simulate_module_events(
     time (``np.nan`` for dropped tail requests).  ``executor`` (when given)
     is called at each batch start with ``(machine, group_size)`` and must
     return the measured service duration in seconds.
+
+    ``phantom`` marks frontend dummy requests.  They occupy batch slots and
+    are executed with the batch (an executor sees the full batch size), but
+    a flush deadline is armed only when a *real* request lands in the
+    formation buffer, and a leftover buffer holding only phantoms is
+    discarded at end of stream instead of flushed.
     """
     if tail not in ("flush", "drop"):
         raise ValueError(f"unknown tail policy {tail!r}")
@@ -62,11 +69,13 @@ def simulate_module_events(
         timeouts = {m.mid: timeout for m in machines}
     ready = np.asarray(ready, dtype=np.float64)
     n = ready.size
+    real = np.ones(n, dtype=bool) if phantom is None else ~np.asarray(phantom, bool)
     finish = np.full(n, np.nan)
     by_mid = {m.mid: m for m in machines}
     batches = {m.mid: 0 for m in machines}
     openbuf: dict[int, list[int]] = {m.mid: [] for m in machines}
     token = {m.mid: 0 for m in machines}  # bumped on close, voids stale flushes
+    armed = {m.mid: False for m in machines}  # deadline set for the open batch
     queue: dict[int, deque] = {m.mid: deque() for m in machines}
     free_at = {m.mid: 0.0 for m in machines}
     busy = {m.mid: False for m in machines}
@@ -89,6 +98,7 @@ def simulate_module_events(
         rids = openbuf[mid]
         openbuf[mid] = []
         token[mid] += 1
+        armed[mid] = False
         queue[mid].append((batch_ready, rids))
         start_next(mid, now)
 
@@ -103,7 +113,10 @@ def simulate_module_events(
             mid = int(assignment[rid])
             buf = openbuf[mid]
             buf.append(rid)
-            if len(buf) == 1 and timeouts[mid] is not None:
+            # the first REAL request arms the flush deadline (without
+            # phantoms this is exactly the first member, as before)
+            if real[rid] and not armed[mid] and timeouts[mid] is not None:
+                armed[mid] = True
                 heapq.heappush(heap, (t + timeouts[mid], _FLUSH, mid, token[mid]))
             if len(buf) >= by_mid[mid].config.batch:
                 close_batch(mid, batch_ready=t, now=t)
@@ -122,8 +135,13 @@ def simulate_module_events(
             # stream over, queues drained: resolve leftover partial batches
             tails_done = True
             for mid, buf in openbuf.items():
-                if buf and timeouts[mid] is None and tail == "flush":
-                    close_batch(mid, batch_ready=float(ready[buf[-1]]), now=float(ready[buf[-1]]))
+                has_real = any(real[r] for r in buf)
+                if buf and has_real and timeouts[mid] is None and tail == "flush":
+                    # flush at the last REAL member's arrival: the frontend
+                    # stops injecting phantoms once the stream ends, so
+                    # trailing phantoms must not inflate real tail latency
+                    t_last = float(ready[max(r for r in buf if real[r])])
+                    close_batch(mid, batch_ready=t_last, now=t_last)
                 elif buf:
                     openbuf[mid] = []  # drop (finish stays NaN)
             continue

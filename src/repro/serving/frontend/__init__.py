@@ -1,0 +1,74 @@
+"""Overload-aware serving frontend: the layer between arrivals and dispatch.
+
+The PR-1 simulator modeled a serving cluster that can only be driven *at*
+its provisioned rate: dummy traffic was priced but never streamed, every
+arrival was admitted no matter the backlog, and clients were open-loop.
+This package adds the three frontend behaviors real inference clouds hinge
+on, all opt-in via :class:`FrontendConfig` (the default reproduces PR-1 /
+seed numbers exactly):
+
+* **dummy streaming** (`.dummy`) — the plan's priced ``Alloc.dummy`` traffic
+  is injected as phantom requests into batch formation, so dummy-padded
+  plans hit their modeled WCL and ``timeout="budget"`` no longer needs a
+  fill-time floor; phantom slots count toward batch fill but never toward
+  latency/attainment statistics.
+* **admission control** (`.admission`) — token-bucket or queue-depth
+  shedding at ingress (per-app policies supported) bounds p99 under bursty
+  overload at the price of an explicit, reported shed rate.
+* **closed-loop clients** (`.clients`) — bounded in-flight frames per
+  client with optional jittered retry-on-shed, run to a fixed point with
+  the engine's simulated per-frame latencies.
+
+Usage sketch::
+
+    from repro.serving import ServingEngine
+    from repro.serving.frontend import FrontendConfig, TokenBucket
+
+    fe = FrontendConfig(dummies=True, admission=TokenBucket(burst=4))
+    res = ServingEngine(plan).run(
+        2000, frame_rate, arrivals="mmpp", timeout="budget", frontend=fe,
+        offered_rate=1.3 * frame_rate,   # drive past provisioning
+    )
+    res.attainment, res.shed, res.p99    # shed frames count as SLO misses
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping
+
+from .admission import (
+    AdmissionController,
+    AdmissionPolicy,
+    QueueDepth,
+    TokenBucket,
+    make_admission,
+)
+from .clients import ClosedLoopClients, closed_loop_ingress
+from .dummy import merge_phantoms, phantom_times
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Frontend behavior knobs for one `ServingEngine.run`.
+
+    The default instance is the identity frontend: no dummy streaming, admit
+    everything, open-loop arrivals — bit-identical to running without one.
+    """
+
+    dummies: bool = False
+    admission: "AdmissionPolicy | Mapping[str, AdmissionPolicy]" = None
+    clients: ClosedLoopClients | None = None
+
+
+__all__ = [
+    "AdmissionController",
+    "AdmissionPolicy",
+    "ClosedLoopClients",
+    "FrontendConfig",
+    "QueueDepth",
+    "TokenBucket",
+    "closed_loop_ingress",
+    "make_admission",
+    "merge_phantoms",
+    "phantom_times",
+]

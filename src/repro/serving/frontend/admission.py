@@ -1,0 +1,149 @@
+"""Ingress admission control: shed frames *before* they enter the pipeline.
+
+Under overload (bursty MMPP arrivals at or above the provisioned rate) the
+PR-1 simulator's queues — and therefore p99 — grow without bound, because
+Harpagon paces machines with zero slack.  A real serving frontend sheds at
+ingress instead ("No DNN Left Behind" / OCTOPINF): a bounded admitted rate
+keeps queueing delay bounded, trading a shed-rate for a p99 guarantee.
+
+Policies (resolved per app via :func:`make_admission`):
+
+* ``None`` / ``"none"``      — admit everything (PR-1 behavior).
+* :class:`TokenBucket`       — sustained ``rate`` frames/s with ``burst``
+  bucket depth; admitted traffic over any window ``[t, t+w]`` is bounded by
+  ``rate * w + burst``.
+* :class:`QueueDepth`        — shed when a virtual ingress queue, draining at
+  the provisioned frame rate, already holds ``depth`` frames (the classic
+  bounded-buffer frontend).
+
+Controllers are *stateful sequential* objects: `admit(t)` must be called in
+non-decreasing time order (the engine feeds it the sorted arrival stream;
+the closed-loop client simulation feeds it its own monotone event clock).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Mapping, Union
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TokenBucket:
+    """Token-bucket shedding: ``rate`` frames/s sustained, ``burst`` depth.
+
+    ``rate=None`` binds to the provisioned frame rate at engine time — the
+    natural operating point: admit exactly what the plan paid machines for.
+    """
+
+    rate: float | None = None
+    burst: float = 8.0
+
+
+@dataclass(frozen=True)
+class QueueDepth:
+    """Bounded virtual ingress queue: shed when ``depth`` frames are waiting.
+
+    The virtual queue drains FIFO at ``drain_rate`` (``None`` = provisioned
+    frame rate), approximating the pipeline's first-stage service capacity.
+    """
+
+    depth: int = 16
+    drain_rate: float | None = None
+
+
+AdmissionPolicy = Union[None, str, TokenBucket, QueueDepth]
+
+
+class AdmissionController:
+    """Sequential admission over a time-ordered frame stream."""
+
+    def __init__(self, policy: "TokenBucket | QueueDepth", frame_rate: float):
+        if frame_rate <= 0:
+            raise ValueError("frame_rate must be positive")
+        self.policy = policy
+        self.frame_rate = frame_rate
+        if isinstance(policy, TokenBucket):
+            self._rate = policy.rate if policy.rate is not None else frame_rate
+            if self._rate <= 0 or policy.burst < 1.0:
+                raise ValueError("token bucket needs rate>0 and burst>=1")
+        elif isinstance(policy, QueueDepth):
+            self._drain = (
+                policy.drain_rate if policy.drain_rate is not None else frame_rate
+            )
+            if self._drain <= 0 or policy.depth < 1:
+                raise ValueError("queue-depth needs drain_rate>0 and depth>=1")
+        else:
+            raise TypeError(f"unknown admission policy {policy!r}")
+        self.reset()
+
+    def reset(self) -> None:
+        """Restore initial state (full bucket / empty queue)."""
+        self.admitted = 0
+        self.shed = 0
+        if isinstance(self.policy, TokenBucket):
+            self._tokens = float(self.policy.burst)
+            self._last: float | None = None
+        else:
+            self._finish: deque[float] = deque()
+            self._free = 0.0
+
+    def admit(self, t: float) -> bool:
+        """Admit or shed one frame arriving at time ``t`` (non-decreasing)."""
+        if isinstance(self.policy, TokenBucket):
+            if self._last is not None:
+                self._tokens = min(
+                    float(self.policy.burst),
+                    self._tokens + (t - self._last) * self._rate,
+                )
+            self._last = t
+            if self._tokens >= 1.0 - 1e-12:
+                self._tokens -= 1.0
+                self.admitted += 1
+                return True
+            self.shed += 1
+            return False
+        # queue depth: retire virtually-served frames, then check occupancy
+        q = self._finish
+        while q and q[0] <= t + 1e-12:
+            q.popleft()
+        if len(q) >= self.policy.depth:
+            self.shed += 1
+            return False
+        self._free = max(self._free, t) + 1.0 / self._drain
+        q.append(self._free)
+        self.admitted += 1
+        return True
+
+    def shed_stream(self, arrivals: np.ndarray) -> np.ndarray:
+        """Vector form: boolean shed mask for a sorted arrival-time array."""
+        return np.fromiter(
+            (not self.admit(float(t)) for t in arrivals), dtype=bool, count=arrivals.size
+        )
+
+
+def make_admission(
+    spec: "AdmissionPolicy | Mapping[str, AdmissionPolicy]",
+    app_name: str,
+    frame_rate: float,
+) -> AdmissionController | None:
+    """Resolve an admission spec (possibly a per-app mapping) to a controller.
+
+    A mapping is keyed by app name with an optional ``"default"`` entry;
+    string shorthands ``"none" | "token_bucket" | "queue_depth"`` select the
+    default-parameter policies.
+    """
+    if isinstance(spec, Mapping):
+        spec = spec.get(app_name, spec.get("default"))
+    if spec is None or spec == "none":
+        return None
+    if isinstance(spec, str):
+        try:
+            spec = {"token_bucket": TokenBucket(), "queue_depth": QueueDepth()}[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown admission policy {spec!r}; "
+                "have none | token_bucket | queue_depth"
+            )
+    return AdmissionController(spec, frame_rate)

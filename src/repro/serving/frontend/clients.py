@@ -1,0 +1,122 @@
+"""Closed-loop clients: arrivals driven by completions, not by a clock.
+
+The PR-1 arrival processes are all *open-loop*: the stream keeps coming no
+matter how slow the service is, which is the right model for camera feeds
+but the wrong one for interactive clients.  A closed-loop client holds at
+most ``max_in_flight`` frames outstanding and issues the next one only after
+a completion (plus think time), so offered load self-throttles under
+overload — the classic closed-vs-open distinction in serving benchmarks.
+
+The ingress simulation here is a sequential event walk over client slots:
+each slot issues a frame, the admission controller (if any) admits or sheds
+it at the issue instant, an admitted frame completes after the per-frame
+latency given by the ``latency`` oracle, and the slot frees ``think`` later.
+A shed frame is retried with exponentially-jittered backoff (when enabled)
+until ``max_retries`` is exhausted, then counts as permanently shed.
+
+The oracle makes this a *fixed-point* formulation: the engine seeds it with
+the plan's modeled end-to-end latency, replays the DAG on the generated
+arrivals, feeds the simulated per-frame latencies back in, and iterates
+until the arrival times stop moving (`ServingEngine._run_closed_loop`).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+from .admission import AdmissionController
+
+
+@dataclass(frozen=True)
+class ClosedLoopClients:
+    """Closed-loop arrival mode configuration.
+
+    ``n_clients * max_in_flight`` independent slots share one global frame
+    counter; ``think_time`` is the mean pause between a completion and the
+    next issue (``think_dist="exp"`` for exponential, ``"const"`` for fixed).
+    """
+
+    n_clients: int = 8
+    max_in_flight: int = 1
+    think_time: float = 0.0
+    think_dist: str = "exp"
+    retry_on_shed: bool = False
+    max_retries: int = 3
+    backoff: float = 0.05     # base retry backoff, doubled per attempt, jittered
+    max_iters: int = 5        # engine fixed-point iterations
+    tol: float = 1e-3         # arrival-time convergence tolerance (seconds)
+
+    def __post_init__(self):
+        if self.n_clients < 1 or self.max_in_flight < 1:
+            raise ValueError("need n_clients >= 1 and max_in_flight >= 1")
+        if self.think_dist not in ("exp", "const"):
+            raise ValueError(f"unknown think_dist {self.think_dist!r}")
+
+
+def closed_loop_ingress(
+    cfg: ClosedLoopClients,
+    n_frames: int,
+    frame_rate: float,
+    latency: np.ndarray,
+    *,
+    admission: AdmissionController | None = None,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Simulate the client/admission ingress; returns ``(issue, shed, attempts)``.
+
+    ``latency[i]`` is the oracle end-to-end latency of frame ``i`` (frames
+    are numbered in issue order).  ``issue[i]`` is the admitted arrival time
+    of frame ``i`` (its final attempt time when permanently shed),
+    ``shed[i]`` marks frames rejected at ingress for good, and ``attempts``
+    counts every issue attempt including retries.  ``frame_rate`` only
+    staggers the initial slot starts (one provisioned inter-frame gap apart).
+    """
+    if latency.shape != (n_frames,):
+        raise ValueError("latency oracle must have one entry per frame")
+    rng = np.random.default_rng(seed)
+    slots = cfg.n_clients * cfg.max_in_flight
+    issue = np.zeros(n_frames)
+    shed = np.zeros(n_frames, dtype=bool)
+    attempts = 0
+    next_frame = 0
+
+    def think() -> float:
+        if cfg.think_time <= 0.0:
+            return 0.0
+        if cfg.think_dist == "const":
+            return cfg.think_time
+        return float(rng.exponential(cfg.think_time))
+
+    # heap of (time, seq, frame, tries); frame == -1 means "slot wants a new
+    # frame".  seq keeps heap comparisons away from ties.
+    seq = 0
+    heap: list[tuple[float, int, int, int]] = []
+    for k in range(min(slots, n_frames)):
+        heapq.heappush(heap, (k / frame_rate, seq, -1, 0))
+        seq += 1
+
+    while heap:
+        t, _, frame, tries = heapq.heappop(heap)
+        if frame == -1:
+            if next_frame >= n_frames:
+                continue  # stream exhausted: slot retires
+            frame = next_frame
+            next_frame += 1
+            tries = 0
+        attempts += 1
+        admitted = admission.admit(t) if admission is not None else True
+        if admitted:
+            issue[frame] = t
+            done = t + max(float(latency[frame]), 0.0)
+            heapq.heappush(heap, (done + think(), seq, -1, 0))
+        elif cfg.retry_on_shed and tries < cfg.max_retries:
+            delay = cfg.backoff * (2.0 ** tries) * float(rng.uniform(0.5, 1.5))
+            heapq.heappush(heap, (t + delay, seq, frame, tries + 1))
+        else:
+            issue[frame] = t
+            shed[frame] = True
+            heapq.heappush(heap, (t + think(), seq, -1, 0))
+        seq += 1
+    return issue, shed, attempts

@@ -35,10 +35,18 @@ class ModuleReplay:
     finish: np.ndarray  # absolute completion time per request (NaN = dropped)
     assignment: np.ndarray  # serving machine id per request
     batches: dict[int, int]  # executed batches per machine
+    phantom: np.ndarray | None = None  # frontend dummy-request mask (None = none)
 
     @property
     def done(self) -> np.ndarray:
         return ~np.isnan(self.finish)
+
+    @property
+    def real(self) -> np.ndarray:
+        """Mask of real (non-phantom) requests — the only ones stats count."""
+        if self.phantom is None:
+            return np.ones(self.finish.size, dtype=bool)
+        return ~self.phantom
 
     @property
     def n_batches(self) -> int:
@@ -58,23 +66,77 @@ def runs_to_assignment(runs: Sequence[tuple[int, int]], n: int) -> np.ndarray:
 
 
 def _batch_bounds(
-    ready: np.ndarray, batch: int, timeout: float | None, tail: str
+    ready: np.ndarray,
+    batch: int,
+    timeout: float | None,
+    tail: str,
+    phantom: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Group a machine's sorted ready times into batches.
 
     Returns ``(sizes, g_ready)``: per-batch request counts (consecutive,
     starting at request 0; a dropped tail is simply not covered) and the time
     each batch is handed to the machine.
+
+    ``phantom`` marks frontend dummy requests.  They fill batch slots like
+    real traffic, but a flush deadline is armed only by the batch's first
+    *real* request (the deadline exists to bound real latency), and a
+    leftover batch containing only phantoms is discarded at end of stream
+    instead of executed (the frontend stops injecting when the stream ends).
     """
     n = ready.size
+    has_phantom = phantom is not None and bool(phantom.any())
     if timeout is None:
         n_full, tail_sz = divmod(n, batch)
-        ng = n_full + (1 if tail_sz and tail == "flush" else 0)
+        flush_tail = bool(tail_sz) and tail == "flush"
+        if flush_tail and has_phantom and bool(phantom[n_full * batch:].all()):
+            flush_tail = False  # phantom-only tail: nothing real to flush for
+        ng = n_full + (1 if flush_tail else 0)
         if ng == 0:
             return np.zeros(0, np.int64), np.zeros(0)
         last = np.minimum(np.arange(1, ng + 1) * batch, n) - 1
         sizes = np.diff(np.concatenate([[0], last + 1]))
-        return sizes, ready[last]
+        g_ready = ready[last]
+        if flush_tail and has_phantom:
+            # the end-of-stream flush happens at the tail's last REAL arrival
+            # (the frontend stops injecting once the stream ends) — trailing
+            # phantoms must not inflate real tail latency
+            tail_real = np.flatnonzero(~phantom[n_full * batch:])
+            g_ready = g_ready.astype(np.float64, copy=True)
+            g_ready[-1] = ready[n_full * batch + tail_real[-1]]
+        return sizes, g_ready
+    if has_phantom:
+        # greedy scan with real-opener deadlines (phantom streams are rare
+        # and short — engine runs — so the O(batches) loop is fine)
+        real_idx = np.flatnonzero(~phantom)
+        sizes_l: list[int] = []
+        gr_l: list[float] = []
+        i = 0
+        ri = 0
+        while i < n:
+            while ri < real_idx.size and real_idx[ri] < i:
+                ri += 1
+            if ri >= real_idx.size:
+                # only phantoms remain: full batches still close by fill
+                # (the machine cannot know), the partial remainder is never
+                # time-flushed and drops at end of stream
+                while i + batch <= n:
+                    sizes_l.append(batch)
+                    gr_l.append(float(ready[i + batch - 1]))
+                    i += batch
+                break
+            deadline = float(ready[real_idx[ri]]) + timeout
+            j = i + batch
+            j_dl = int(np.searchsorted(ready, deadline, side="right"))
+            if j <= j_dl:  # fills before the first real request's deadline
+                r = float(ready[j - 1])
+            else:
+                j = j_dl
+                r = deadline
+            sizes_l.append(j - i)
+            gr_l.append(r)
+            i = j
+        return np.asarray(sizes_l, np.int64), np.asarray(gr_l)
     # deadline semantics: tentative reshape boundaries are valid iff every
     # group's opener deadline covers the group's last member (and the tail's
     # covers the end of stream)
@@ -87,8 +149,8 @@ def _batch_bounds(
             g_ready[-1] = ready[starts[-1]] + timeout
         return ends - starts, g_ready
     # bursty fallback: greedy scan, one iteration per *batch* (not request)
-    sizes_l: list[int] = []
-    gr_l: list[float] = []
+    sizes_l = []
+    gr_l = []
     i = 0
     while i < n:
         deadline = ready[i] + timeout
@@ -112,11 +174,13 @@ def replay_machine(
     *,
     timeout: float | None = None,
     tail: str = "flush",
+    phantom: np.ndarray | None = None,
 ) -> tuple[np.ndarray, int]:
     """Replay one machine; returns ``(finish, n_batches)``.
 
     ``ready`` must be sorted.  ``finish[i]`` is the absolute completion time
-    of request ``i`` (NaN when the tail is dropped).
+    of request ``i`` (NaN when the tail is dropped).  ``phantom`` marks
+    frontend dummy requests (see `_batch_bounds` for their semantics).
     """
     if tail not in ("flush", "drop"):
         raise ValueError(f"unknown tail policy {tail!r}")
@@ -125,7 +189,7 @@ def replay_machine(
     finish = np.full(n, np.nan)
     if n == 0:
         return finish, 0
-    sizes, g_ready = _batch_bounds(ready, batch, timeout, tail)
+    sizes, g_ready = _batch_bounds(ready, batch, timeout, tail, phantom)
     ng = sizes.size
     if ng == 0:
         return finish, 0
@@ -145,6 +209,7 @@ def replay_module(
     timeout: "float | None | Mapping[int, float]" = None,
     tail: str = "flush",
     method: str = "vectorized",
+    phantom: np.ndarray | None = None,
 ) -> ModuleReplay:
     """Replay one module's machines over a sorted request-ready stream.
 
@@ -153,16 +218,23 @@ def replay_module(
     mapping (machines with longer service need shorter collection windows to
     meet the same budget).  ``method="events"`` routes through the reference
     event core instead of the vectorized kernel (identical results; used for
-    cross-validation and whenever real executors are involved).
+    cross-validation and whenever real executors are involved).  ``phantom``
+    marks frontend dummy requests: they fill batch slots but never arm flush
+    deadlines or force end-of-stream flushes, and callers exclude them from
+    latency statistics via ``ModuleReplay.real``.
     """
     ready = np.asarray(ready, dtype=np.float64)
     n = ready.size
     assignment = runs_to_assignment(runs, n)
+    if phantom is not None:
+        phantom = np.asarray(phantom, dtype=bool)
+        if phantom.shape != ready.shape:
+            raise ValueError("phantom mask must match the request stream")
     if method == "events":
         finish, batches = simulate_module_events(
-            machines, ready, assignment, timeout=timeout, tail=tail
+            machines, ready, assignment, timeout=timeout, tail=tail, phantom=phantom
         )
-        return ModuleReplay(finish, assignment, batches)
+        return ModuleReplay(finish, assignment, batches, phantom)
     if method != "vectorized":
         raise ValueError(f"unknown method {method!r}")
     finish = np.full(n, np.nan)
@@ -180,11 +252,12 @@ def replay_module(
         idx = order[lo:hi]
         w = timeout.get(m.mid) if isinstance(timeout, Mapping) else timeout
         f, nb = replay_machine(
-            ready[idx], m.config.batch, m.config.duration, timeout=w, tail=tail
+            ready[idx], m.config.batch, m.config.duration, timeout=w, tail=tail,
+            phantom=None if phantom is None else phantom[idx],
         )
         finish[idx] = f
         batches[m.mid] = nb
-    return ModuleReplay(finish, assignment, batches)
+    return ModuleReplay(finish, assignment, batches, phantom)
 
 
 def expand_fanout(frames: np.ndarray, fanout: float) -> np.ndarray:

