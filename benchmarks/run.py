@@ -295,6 +295,53 @@ def bench_shed_sweep(n: int) -> None:
             )
 
 
+def bench_pipeline_sweep(n: int) -> None:
+    """Pipelined end-to-end p99 vs the analytic critical-path WCL sum, per
+    latency splitter.  The multi-module co-simulation (engine
+    ``pipeline=True``) is the first honest end-to-end check of the splitter
+    budgets: every frame traverses the DAG through real batch formation, so
+    p99/WCL-sum near 1.0 means the per-module budget assignment survives
+    cross-stage hand-off; the mean sits below it by the batch-collection
+    slack."""
+    from repro.core.harpagon import PlannerOptions
+    from repro.workloads.apps import app_by_name, make_workload
+
+    seeds = (
+        ("traffic", 100.0, 2.0), ("face", 150.0, 2.5), ("pose", 60.0, 3.0),
+        ("caption", 90.0, 2.5), ("actdet", 80.0, 3.0),
+    )
+    n_frames = max(200, min(n, 600))
+    for split in ("lc", "throughput", "even", "quantized"):
+        ratios, means, attains, apps = [], [], [], 0
+        t0 = time.perf_counter()
+        for name, rate, slo in seeds:
+            wl = make_workload(app_by_name(name), rate, slo)
+            opts = PlannerOptions(name=f"split-{split}", split=split)
+            plan = Planner(opts).plan(wl, PROFILES)
+            if not plan.feasible:
+                continue
+            res = ServingEngine(plan).run(n_frames, rate, pipeline=True)
+            wcl_sum = plan.e2e_latency
+            ratios.append(res.p99 / wcl_sum)
+            means.append(
+                sum(res.e2e_latencies) / max(1, len(res.e2e_latencies)) / wcl_sum
+            )
+            attains.append(res.attainment)
+            apps += 1
+        us = (time.perf_counter() - t0) * 1e6 / max(1, apps)
+        emit(
+            f"pipeline_sweep_{split}",
+            us,
+            f"p99/wcl={finite_mean(ratios):.3f}|mean/wcl={finite_mean(means):.3f}"
+            f"|attain={finite_mean(attains):.3f}|apps={apps}/5",
+            split=split,
+            p99_over_wcl=round(finite_mean(ratios), 4),
+            mean_over_wcl=round(finite_mean(means), 4),
+            attain=round(finite_mean(attains), 4),
+            apps=apps,
+        )
+
+
 def bench_replay_speed(n: int) -> None:
     """Vectorized replay kernel vs the frozen pure-Python loop at 10^6
     requests on one planned module (acceptance: >= 5x)."""
@@ -359,12 +406,13 @@ BENCHES = {
     "fig8": bench_fig8_multiconfig,
     "slo_sweep": bench_slo_sweep,
     "shed_sweep": bench_shed_sweep,
+    "pipeline_sweep": bench_pipeline_sweep,
     "replay": bench_replay_speed,
     "runtime": bench_runtime,
 }
 
 # serving-subsystem rows tracked across PRs by `--json` (BENCH_serving.json)
-_SERVING_PREFIXES = ("replay_", "slo_sweep_", "shed_sweep_")
+_SERVING_PREFIXES = ("replay_", "slo_sweep_", "shed_sweep_", "pipeline_sweep_")
 
 
 def main() -> None:

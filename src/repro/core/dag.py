@@ -88,6 +88,48 @@ def sp_latency(sp: SP, weight: Mapping[str, float] | Callable[[str], float]) -> 
     return max(sp_latency(p, weight) for p in sp.parts)
 
 
+def sp_critical_masks(
+    sp: SP, sojourn: Mapping[str, "np.ndarray"]
+) -> tuple["np.ndarray", dict[str, "np.ndarray"]]:
+    """Vectorized per-sample longest-path decomposition over the SP tree.
+
+    ``sojourn[m]`` is an array of per-sample latency contributions (one entry
+    per frame; NaN where the frame never traversed ``m``).  Returns
+    ``(latency, masks)``: the realized critical-path latency per sample and a
+    per-module boolean mask marking membership on that sample's critical path
+    — the per-frame traversal state the pipelined co-simulation attributes
+    budget overruns with.  Identity: ``latency == sum_m sojourn[m] * masks[m]``
+    (NaN-traversal entries excluded), because a Series keeps every member on
+    the path while a Par keeps only the argmax branch.
+    """
+    import numpy as np
+
+    if isinstance(sp, Leaf):
+        s = np.asarray(sojourn[sp.name], dtype=np.float64)
+        return s, {sp.name: ~np.isnan(s)}
+    if isinstance(sp, Series):
+        parts = [sp_critical_masks(p, sojourn) for p in sp.parts]
+        lat = parts[0][0].copy()
+        masks: dict[str, "np.ndarray"] = dict(parts[0][1])
+        for p_lat, p_masks in parts[1:]:
+            lat = lat + p_lat
+            masks.update(p_masks)
+        return lat, masks
+    # Par: the argmax branch carries the path; ties go to the earliest part
+    # (matching `sp_latency`'s max). NaN branches (never traversed) lose.
+    parts = [sp_critical_masks(p, sojourn) for p in sp.parts]
+    stack = np.stack([np.where(np.isnan(p[0]), -np.inf, p[0]) for p in parts])
+    arg = np.argmax(stack, axis=0)
+    lat = np.max(stack, axis=0)
+    lat = np.where(np.isinf(lat), np.nan, lat)
+    masks = {}
+    for i, (_, p_masks) in enumerate(parts):
+        on = arg == i
+        for m, pm in p_masks.items():
+            masks[m] = pm & on
+    return lat, masks
+
+
 def sp_depth(sp: SP) -> int:
     """Number of modules on the longest chain (for Clipper's even split)."""
     if isinstance(sp, Leaf):

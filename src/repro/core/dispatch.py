@@ -174,6 +174,22 @@ class Machine:
     rate: float  # assigned request rate (== throughput if at full capacity)
 
 
+def _machine_fractions(allocs: list[Alloc]) -> list[tuple[Alloc, float]]:
+    """The single machine enumerator: ``(owning alloc, capacity fraction)``
+    per machine id, ratio-descending, full machines first, fractional tail
+    last.  Everything that needs a per-machine-id view of an allocation set
+    (`expand_machines`, `remaining_workloads`) derives from this walk so the
+    id correspondence is structural, not re-implemented."""
+    out: list[tuple[Alloc, float]] = []
+    for a in sorted(allocs, key=lambda x: -x.eff_ratio):
+        n_full = math.floor(a.machines + 1e-12)
+        out.extend((a, 1.0) for _ in range(n_full))
+        frac = a.machines - n_full
+        if frac > 1e-9:
+            out.append((a, frac))
+    return out
+
+
 def expand_machines(allocs: list[Alloc]) -> list[Machine]:
     """Expand allocations to individual machines, ratio-descending order.
 
@@ -181,19 +197,26 @@ def expand_machines(allocs: list[Alloc]) -> list[Machine]:
     ``derate * throughput`` (== throughput without headroom); the fractional
     tail machine carries the fractional share of that capacity.
     """
-    machines: list[Machine] = []
-    mid = 0
-    for a in sorted(allocs, key=lambda x: -x.eff_ratio):
-        cap = a.cap
-        n_full = math.floor(a.machines + 1e-12)
-        for _ in range(n_full):
-            machines.append(Machine(mid, a.config, cap))
-            mid += 1
-        frac = a.machines - n_full
-        if frac > 1e-9:
-            machines.append(Machine(mid, a.config, frac * cap))
-            mid += 1
-    return machines
+    return [
+        Machine(mid, a.config, frac * a.cap)
+        for mid, (a, frac) in enumerate(_machine_fractions(allocs))
+    ]
+
+
+def remaining_workloads(allocs: list[Alloc]) -> dict[int, float]:
+    """Per-machine-id remaining REAL workload ``w_i`` under TC ranking.
+
+    Theorem 1: the machines of allocation *a* collect their batches at the
+    total rate of traffic dispatched at-or-below *a*'s rank — not at the
+    whole module rate.  Machine ids match `expand_machines` (both derive
+    from `_machine_fractions`).  Only real rates count: the caller is the
+    ``timeout="budget"`` fill-time floor for plans whose dummy traffic is
+    *not* streamed, where phantoms cannot help fill a batch.
+    """
+    return {
+        mid: sum(x.rate for x in allocs if x.eff_ratio <= a.eff_ratio + _EPS)
+        for mid, (a, _frac) in enumerate(_machine_fractions(allocs))
+    }
 
 
 def dispatch_runs(

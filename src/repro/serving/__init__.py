@@ -10,11 +10,17 @@ Layers, ingress to silicon:
   ingress, per-app policies), and closed-loop clients (bounded in-flight
   frames, jittered retry-on-shed) as an alternative to open-loop arrivals.
 * ``events``    — priority-queue discrete-event core with real tail-batch
-  deadline semantics; reference implementation, supports real executors.
+  deadline semantics; reference implementation, supports real executors;
+  its per-machine ``MachineCore`` is the composable stage brick.
 * ``replay``    — numpy-vectorized per-machine replay kernel (the hot path),
   property-tested against the event core.
 * ``engine``    — DAG-level adapter executing a Harpagon ``Plan`` over a
   frame stream (fanout expansion, per-module dispatch, e2e accounting).
+* ``pipeline``  — multi-module pipelined co-simulation: frames traverse the
+  DAG as tracked entities, downstream ingress fed by upstream batch
+  completions, bounded queues exert backpressure, per-frame fanout can be
+  stochastic and sibling-correlated, clients/admission live inside the
+  event loop.  Selected via ``ServingEngine.run(pipeline=True)``.
 * ``simulator`` — module-level Theorem-1 validation harness.
 * ``reference`` — the frozen seed loops (golden equivalence baselines).
 
@@ -60,6 +66,7 @@ from .frontend import (
     TokenBucket,
     make_admission,
 )
+from .pipeline import FanoutSpec, PipelineConfig, PipelineResult
 from .replay import ModuleReplay, expand_fanout, replay_machine, replay_module
 from .reference import engine_run_reference, simulate_reference
 from .simulator import SimResult, simulate
@@ -67,8 +74,11 @@ from .simulator import SimResult, simulate
 __all__ = [
     "ARRIVALS",
     "ClosedLoopClients",
+    "FanoutSpec",
     "FrontendConfig",
     "ModuleReplay",
+    "PipelineConfig",
+    "PipelineResult",
     "ModuleStats",
     "QueueDepth",
     "ServeResult",

@@ -26,17 +26,35 @@ ingress under an admission policy, and can replace the open-loop arrival
 process with closed-loop clients.  ``run(..., offered_rate=...)`` drives the
 plan past its provisioned rate while keeping the provisioned fanout — the
 honest overload experiment the frontend exists for.
+
+``run(..., pipeline=True)`` switches from the per-module topological replay
+to the multi-module pipelined co-simulation (`repro.serving.pipeline`):
+frames traverse the DAG as tracked entities, downstream ingress is fed by
+upstream batch completions, bounded queues exert backpressure, fanout can be
+per-frame stochastic (correlated across siblings), and closed-loop clients
+plus admission run *inside* the event loop.  The returned ``ServeResult``
+then carries the full per-frame record in ``.pipeline`` — including the
+per-module budget-overrun attribution that gives `core.splitter` its first
+honest end-to-end check.  The default (``pipeline=False``) is the flat path,
+bit-identical to before.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
 from ..core.dag import Workload, topo_sort
-from ..core.dispatch import Machine, Policy, dispatch_runs, expand_machines
+from ..core.dispatch import (
+    Machine,
+    Policy,
+    dispatch_runs,
+    expand_machines,
+    remaining_workloads,
+)
 from ..core.harpagon import Plan
 from .arrivals import make_arrivals
 from .events import simulate_module_events
@@ -66,6 +84,7 @@ class ServeResult:
     shed: int = 0      # frames rejected at ingress by the admission controller
     dropped: int = 0   # admitted frames lost mid-pipeline (tail drops etc.)
     attempts: int = 0  # closed-loop issue attempts incl. retries (0 = open loop)
+    pipeline: "object | None" = None  # PipelineResult when run(pipeline=...)
 
     @property
     def offered(self) -> int:
@@ -114,6 +133,7 @@ class ServingEngine:
         tail: str = "flush",
         frontend: FrontendConfig | None = None,
         offered_rate: float | None = None,
+        pipeline: "bool | object" = False,
     ) -> ServeResult:
         """Serve ``n_frames`` frames arriving at ``offered_rate`` (default:
         the provisioned ``frame_rate``) through the planned DAG.
@@ -125,18 +145,36 @@ class ServingEngine:
         streaming / admission control / closed-loop clients (`FrontendConfig`);
         with ``frontend.clients`` set the ``arrivals`` process is ignored —
         issue times come from the client loop.
+
+        ``pipeline`` selects the multi-module co-simulation (``True`` or a
+        `repro.serving.pipeline.PipelineConfig` for bounded queues and
+        stochastic fanout); the default flat path replays modules in
+        topological order with unbounded hand-off.
         """
         fe = frontend or FrontendConfig()
         wl: Workload = self.plan.workload
         ctrl = make_admission(fe.admission, wl.app.name, frame_rate)
+        if offered_rate is not None and offered_rate <= 0:
+            raise ValueError("offered_rate must be positive")
+        if pipeline:
+            return self._run_pipeline(
+                n_frames, frame_rate, fe, ctrl,
+                arrivals=arrivals, seed=seed, timeout=timeout, tail=tail,
+                offered_rate=offered_rate, cfg=pipeline,
+            )
         if fe.clients is not None:
+            warnings.warn(
+                "the fixed-point closed loop (clients= without pipeline=True) "
+                "is deprecated: the event-interleaved co-simulation "
+                "(pipeline=True) replaces the latency-oracle iteration",
+                DeprecationWarning,
+                stacklevel=2,
+            )
             return self._run_closed_loop(
                 n_frames, frame_rate, fe, ctrl,
                 seed=seed, timeout=timeout, tail=tail,
                 offered_rate=offered_rate,
             )
-        if offered_rate is not None and offered_rate <= 0:
-            raise ValueError("offered_rate must be positive")
         arrival = make_arrivals(
             arrivals, n_frames,
             offered_rate if offered_rate is not None else frame_rate,
@@ -177,8 +215,6 @@ class ServingEngine:
         est0 = self.plan.e2e_latency
         if not np.isfinite(est0) or est0 <= 0.0:
             est0 = wl.slo
-        if offered_rate is not None and offered_rate <= 0:
-            raise ValueError("offered_rate must be positive")
         est = np.full(n_frames, max(est0, 1e-6))
         pace = offered_rate if offered_rate is not None else frame_rate
         result = ServeResult([], {}, wl.slo)
@@ -201,6 +237,93 @@ class ServingEngine:
                 break
             prev_arrival = arrival
         return result
+
+    def _run_pipeline(
+        self,
+        n_frames: int,
+        frame_rate: float,
+        fe: FrontendConfig,
+        ctrl,
+        *,
+        arrivals: "str | np.ndarray | Sequence[float]",
+        seed: int,
+        timeout: "float | str | None",
+        tail: str,
+        offered_rate: float | None,
+        cfg,
+    ) -> ServeResult:
+        """Multi-module pipelined co-simulation (`repro.serving.pipeline`)."""
+        from .pipeline import ModuleStage, PipelineConfig, make_stage_fanouts
+        from .pipeline.core import run_pipeline
+
+        if cfg is True:
+            cfg = PipelineConfig()
+        if not isinstance(cfg, PipelineConfig):
+            raise TypeError(f"pipeline= expects True or PipelineConfig, got {cfg!r}")
+        if self.executors:
+            raise NotImplementedError(
+                "pipeline mode is virtual-time only; real executors run on "
+                "the single-module event core"
+            )
+        wl: Workload = self.plan.workload
+        topo = topo_sort(wl.app.modules, wl.app.edges)
+        sources = [m for m in topo if not wl.app.parents(m)]
+        fanouts = {m: wl.rates[m] / frame_rate for m in topo}
+        stage_fanouts = make_stage_fanouts(
+            cfg.fanout, fanouts, sources, n_frames, seed=seed + 1
+        )
+        stages = {}
+        for m in topo:
+            s = self.plan.schedules[m]
+            machines = expand_machines(list(s.allocs))
+            w = self._module_timeout(m, machines, timeout, dummies=fe.dummies)
+            # adaptive dummy streaming: pad the stage's collection up to the
+            # provisioned collect rate (real + priced dummy), mirroring the
+            # flat frontend's deficit injector — phantoms flow exactly when
+            # real traffic lags the rate the budget deadline assumes
+            target = sum(a.rate + a.dummy for a in s.allocs) if fe.dummies else 0.0
+            stages[m] = ModuleStage(
+                m,
+                machines,
+                self.policy,
+                timeout=w,
+                fanout=stage_fanouts[m],
+                phantom_target=target,
+                queue_cap=cfg.queue_cap,
+            )
+        pace = offered_rate if offered_rate is not None else frame_rate
+        if ctrl is not None:
+            ctrl.reset()
+        if fe.clients is not None:
+            res = run_pipeline(
+                wl.app, stages, n_frames,
+                clients=fe.clients, pace=pace, admission=ctrl,
+                tail=tail, seed=seed,
+            )
+        else:
+            issue = make_arrivals(arrivals, n_frames, pace, seed=seed)
+            res = run_pipeline(
+                wl.app, stages, n_frames,
+                issue=issue, admission=ctrl, tail=tail, seed=seed,
+            )
+        stats = {}
+        for m in topo:
+            ss = res.stats[m]
+            stats[m] = ModuleStats(
+                latencies=ss.latencies,
+                batches=ss.batches,
+                dropped=ss.dropped,
+                phantom=ss.phantom,
+            )
+        return ServeResult(
+            res.e2e[res.completed].tolist(),
+            stats,
+            wl.slo,
+            shed=int(res.shed.sum()),
+            dropped=int(res.dropped.sum()),
+            attempts=res.attempts,
+            pipeline=res,
+        )
 
     def _serve(
         self,
@@ -281,15 +404,23 @@ class ServingEngine:
             # frontend injects phantom requests to speed collection, which the
             # engine does not simulate — flushing faster than real traffic can
             # fill a batch would silently overload the machine instead.  Under
-            # TC a machine's batch is a consecutive slice of the stream (fills
-            # at the whole module rate); under RR/DT it fills only at the
-            # machine's own share of the traffic.
-            tot = sum(mm.rate for mm in machines)
-            def fill(mm: Machine) -> float:
-                rate = s.rate
-                if self.policy is not Policy.TC and tot > 0:
-                    rate *= mm.rate / tot
-                return mm.config.batch / max(rate, 1e-12)
+            # TC machine i's batch is a consecutive slice of the stream, but
+            # it fills at the *remaining* workload w_i (Theorem 1): a
+            # lower-ranked machine sees only the traffic dispatched at or
+            # below its rank, so its honest floor is longer than the whole-
+            # module fill time.  Under RR/DT a machine fills only at its own
+            # share of the traffic.
+            if self.policy is Policy.TC:
+                w_of = remaining_workloads(list(s.allocs))
+                def fill(mm: Machine) -> float:
+                    return mm.config.batch / max(w_of.get(mm.mid, s.rate), 1e-12)
+            else:
+                tot = sum(mm.rate for mm in machines)
+                def fill(mm: Machine) -> float:
+                    rate = s.rate
+                    if tot > 0:
+                        rate *= mm.rate / tot
+                    return mm.config.batch / max(rate, 1e-12)
             return {
                 mm.mid: max(s.budget - mm.config.duration, fill(mm))
                 for mm in machines

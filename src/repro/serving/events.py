@@ -12,9 +12,16 @@ core simulates is *batch formation and service* with real deadline semantics:
 * closed batches queue FIFO at the machine; service takes the profiled
   duration (or a real measured executor call) and the machine frees.
 
-Implemented as a single priority queue over arrival / batch-flush /
-machine-free events.  This is the *reference* implementation: it supports
-real executors and arbitrary arrival patterns, and the vectorized hot path
+The per-machine mechanics live in :class:`MachineCore` — a composable stage
+brick with no event loop of its own.  Two owners drive it: the single-module
+reference loop below (`simulate_module_events`, one priority queue over
+arrival / batch-flush / machine-free events) and the multi-module pipelined
+co-simulation (`repro.serving.pipeline`), where many cores across DAG stages
+share one global event loop and upstream batch completions feed downstream
+formation buffers.
+
+This is the *reference* implementation: it supports real executors and
+arbitrary arrival patterns, and the vectorized hot path
 (`repro.serving.replay`) is property-tested to agree with it.  End-of-stream
 handling when ``timeout is None`` is governed by ``tail``:
 
@@ -34,6 +41,85 @@ import numpy as np
 from ..core.dispatch import Machine
 
 _ARRIVE, _FLUSH, _FREE = 0, 1, 2
+
+
+class MachineCore:
+    """Batch formation + FIFO service state of ONE machine.
+
+    The owner's event loop calls into it; the core never touches a heap
+    itself, which is what makes it composable across stages:
+
+    * :meth:`add` appends a member to the open formation buffer and returns
+      a flush deadline to arm when this member is the batch's first *real*
+      request (phantoms fill slots but never arm deadlines — the deadline
+      exists to bound real latency);
+    * :meth:`close` moves the buffer to the FIFO service queue and bumps
+      ``token`` so stale flush events become void;
+    * :meth:`start` pops the next queued batch when the machine is idle and
+      returns its completion time — the owner schedules the free event;
+    * :meth:`free` / :meth:`discard` complete the lifecycle.
+
+    Members are opaque to the core (request ids here, per-frame instance
+    entities in the pipelined co-simulation).
+    """
+
+    __slots__ = ("machine", "timeout", "buf", "token", "armed", "queue", "free_at", "busy")
+
+    def __init__(self, machine: Machine, timeout: "float | None" = None):
+        self.machine = machine
+        self.timeout = timeout
+        self.buf: list = []          # open formation buffer
+        self.token = 0               # bumped on close; voids stale flush events
+        self.armed = False           # a flush deadline exists for the open batch
+        self.queue: deque = deque()  # closed batches: (batch_ready, members)
+        self.free_at = 0.0
+        self.busy = False
+
+    def add(self, member, t: float, is_real: bool) -> "float | None":
+        """Append one member at time ``t``; returns a deadline to arm (the
+        first REAL member of an un-armed batch under a finite timeout)."""
+        self.buf.append(member)
+        if is_real and not self.armed and self.timeout is not None:
+            self.armed = True
+            return t + self.timeout
+        return None
+
+    @property
+    def full(self) -> bool:
+        return len(self.buf) >= self.machine.config.batch
+
+    def close(self, batch_ready: float) -> None:
+        """Move the open buffer to the service queue (fill or flush)."""
+        self.queue.append((batch_ready, self.buf))
+        self.buf = []
+        self.token += 1
+        self.armed = False
+
+    def discard(self) -> list:
+        """Drop the open buffer (end-of-stream leftovers); returns it."""
+        dropped, self.buf = self.buf, []
+        self.token += 1
+        self.armed = False
+        return dropped
+
+    def start(self, now: float, duration: Callable[[list], float]) -> "tuple[float, list] | None":
+        """Start the next queued batch if idle; returns ``(end, members)``.
+
+        ``duration(members)`` supplies the service time (profiled constant or
+        a real measured executor call); the owner schedules the free event at
+        ``end`` and records per-member completion.
+        """
+        if self.busy or not self.queue:
+            return None
+        batch_ready, members = self.queue.popleft()
+        start = max(batch_ready, self.free_at, now)
+        end = start + duration(members)
+        self.busy = True
+        return end, members
+
+    def free(self, t: float) -> None:
+        self.busy = False
+        self.free_at = t
 
 
 def simulate_module_events(
@@ -71,35 +157,28 @@ def simulate_module_events(
     n = ready.size
     real = np.ones(n, dtype=bool) if phantom is None else ~np.asarray(phantom, bool)
     finish = np.full(n, np.nan)
-    by_mid = {m.mid: m for m in machines}
+    cores = {m.mid: MachineCore(m, timeouts[m.mid]) for m in machines}
     batches = {m.mid: 0 for m in machines}
-    openbuf: dict[int, list[int]] = {m.mid: [] for m in machines}
-    token = {m.mid: 0 for m in machines}  # bumped on close, voids stale flushes
-    armed = {m.mid: False for m in machines}  # deadline set for the open batch
-    queue: dict[int, deque] = {m.mid: deque() for m in machines}
-    free_at = {m.mid: 0.0 for m in machines}
-    busy = {m.mid: False for m in machines}
     heap: list[tuple[float, int, int, int]] = []  # (time, kind, mid, payload)
 
     def start_next(mid: int, now: float) -> None:
-        if busy[mid] or not queue[mid]:
+        core = cores[mid]
+        m = core.machine
+        dur = (
+            (lambda rids: executor(m, len(rids)))
+            if executor is not None
+            else (lambda rids: m.config.duration)
+        )
+        started = core.start(now, dur)
+        if started is None:
             return
-        batch_ready, rids = queue[mid].popleft()
-        m = by_mid[mid]
-        start = max(batch_ready, free_at[mid], now)
-        dur = executor(m, len(rids)) if executor is not None else m.config.duration
-        end = start + dur
-        busy[mid] = True
+        end, rids = started
         batches[mid] += 1
         finish[rids] = end
         heapq.heappush(heap, (end, _FREE, mid, 0))
 
     def close_batch(mid: int, batch_ready: float, now: float) -> None:
-        rids = openbuf[mid]
-        openbuf[mid] = []
-        token[mid] += 1
-        armed[mid] = False
-        queue[mid].append((batch_ready, rids))
+        cores[mid].close(batch_ready)
         start_next(mid, now)
 
     ai = 0  # pointer into the (sorted) arrival stream
@@ -111,30 +190,27 @@ def simulate_module_events(
             t, rid = float(ready[ai]), ai
             ai += 1
             mid = int(assignment[rid])
-            buf = openbuf[mid]
-            buf.append(rid)
-            # the first REAL request arms the flush deadline (without
-            # phantoms this is exactly the first member, as before)
-            if real[rid] and not armed[mid] and timeouts[mid] is not None:
-                armed[mid] = True
-                heapq.heappush(heap, (t + timeouts[mid], _FLUSH, mid, token[mid]))
-            if len(buf) >= by_mid[mid].config.batch:
+            core = cores[mid]
+            deadline = core.add(rid, t, bool(real[rid]))
+            if deadline is not None:
+                heapq.heappush(heap, (deadline, _FLUSH, mid, core.token))
+            if core.full:
                 close_batch(mid, batch_ready=t, now=t)
             continue
         if heap:
             t, kind, mid, payload = heapq.heappop(heap)
             if kind == _FLUSH:
-                if payload == token[mid] and openbuf[mid]:
+                if payload == cores[mid].token and cores[mid].buf:
                     close_batch(mid, batch_ready=t, now=t)
             else:  # _FREE
-                busy[mid] = False
-                free_at[mid] = t
+                cores[mid].free(t)
                 start_next(mid, now=t)
             continue
         if not tails_done:
             # stream over, queues drained: resolve leftover partial batches
             tails_done = True
-            for mid, buf in openbuf.items():
+            for mid, core in cores.items():
+                buf = core.buf
                 has_real = any(real[r] for r in buf)
                 if buf and has_real and timeouts[mid] is None and tail == "flush":
                     # flush at the last REAL member's arrival: the frontend
@@ -143,7 +219,7 @@ def simulate_module_events(
                     t_last = float(ready[max(r for r in buf if real[r])])
                     close_batch(mid, batch_ready=t_last, now=t_last)
                 elif buf:
-                    openbuf[mid] = []  # drop (finish stays NaN)
+                    core.discard()  # drop (finish stays NaN)
             continue
         break
     return finish, batches

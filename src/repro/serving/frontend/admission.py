@@ -116,6 +116,29 @@ class AdmissionController:
         self.admitted += 1
         return True
 
+    def admit_live(self, t: float, backlog: int) -> bool:
+        """Admit or shed against *live* pipeline state (event-interleaved).
+
+        ``backlog`` is the caller-observed ingress occupancy at time ``t`` —
+        the pipelined engine passes the number of source-stage *instances*
+        waiting to start service (formation + queued + parked; equal to
+        frames whenever the source fanout is 1, as in every seed app).  A
+        :class:`TokenBucket` is purely time-based and behaves exactly like
+        :meth:`admit`; a :class:`QueueDepth` policy compares this real
+        occupancy against ``depth`` instead of its virtual drain-rate queue
+        — the whole point of the pipelined co-simulation is that shedding
+        reacts to actual instantaneous backlog rather than a modeled one
+        (so the same ``depth`` is a *different*, more honest threshold than
+        in the flat path's virtual queue).
+        """
+        if isinstance(self.policy, TokenBucket):
+            return self.admit(t)
+        if backlog >= self.policy.depth:
+            self.shed += 1
+            return False
+        self.admitted += 1
+        return True
+
     def shed_stream(self, arrivals: np.ndarray) -> np.ndarray:
         """Vector form: boolean shed mask for a sorted arrival-time array."""
         return np.fromiter(

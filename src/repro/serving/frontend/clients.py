@@ -18,6 +18,16 @@ The oracle makes this a *fixed-point* formulation: the engine seeds it with
 the plan's modeled end-to-end latency, replays the DAG on the generated
 arrivals, feeds the simulated per-frame latencies back in, and iterates
 until the arrival times stop moving (`ServingEngine._run_closed_loop`).
+
+.. deprecated::
+    The fixed-point path is superseded by the event-interleaved client loop
+    of the pipelined co-simulation (``ServingEngine.run(pipeline=True)``),
+    where slots react to *actual* completions instead of a previous pass's
+    latency oracle.  `closed_loop_ingress` and the engine shim remain for
+    the flat path (`ServingEngine.run` warns ``DeprecationWarning``), and
+    both formulations are pinned to agree within tolerance on uniform
+    arrivals (tests/test_pipeline.py).  The `ClosedLoopClients` dataclass
+    itself is *not* deprecated — the pipeline reuses it as its client spec.
 """
 from __future__ import annotations
 

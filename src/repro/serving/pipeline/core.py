@@ -1,0 +1,476 @@
+"""Multi-module pipelined co-simulation: one event loop over the whole DAG.
+
+The flat engine (`repro.serving.engine._serve`) replays modules one at a
+time in topological order: each module's full request stream is known before
+the module runs, and downstream only sees per-frame *finish times*.  That is
+exact while queues are unbounded and fanout is deterministic — and blind to
+everything else.  This core instead pushes each frame through the app DAG as
+a tracked entity inside one global discrete-event loop:
+
+* per-module **ingress is fed by upstream batch completions** (not by an
+  independent arrival process): a detector batch finishing at ``t`` lands
+  its frames' classifier crops at ``t``, in frame order;
+* **bounded queues exert backpressure**: a stage at ``queue_cap`` parks
+  deliveries FIFO and the upstream machine that produced them *stays busy*
+  until the stage drains — upstream throughput degrades exactly like a real
+  pipeline with finite inter-stage buffers;
+* **fanout is per-frame** (`.fanout.FanoutSpec`): deterministic accumulator
+  (flat-engine-identical) or seeded stochastic draws correlated across
+  sibling modules;
+* **clients and admission live inside the loop**: closed-loop slots issue
+  the next frame when the previous one actually resolves, and queue-depth
+  admission sheds against the true number of frames in flight — no
+  fixed-point iteration, no latency oracle from a previous pass.
+
+Event ordering at equal timestamps mirrors the single-module reference core:
+arrivals join batches at their deadline instant, and upstream machine-frees
+deliver before a downstream flush at the same instant fires (see
+`stages._K_*`).  All same-time machine-frees are collected before their
+outputs are delivered, sorted by ``(stage topo index, frame id)`` — the same
+order the flat engine's stable ready-sort produces, which is what makes the
+co-simulation cross-validate bit-for-bit against the vectorized kernel on
+unbounded queues with deterministic fanout.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass
+from typing import Mapping
+
+import numpy as np
+
+from ...core.dag import AppDAG
+from ..frontend.admission import AdmissionController
+from ..frontend.clients import ClosedLoopClients
+from .fanout import FanoutSpec
+from .result import PipelineResult
+from .stages import Instance, ModuleStage, _K_ARRIVE, _K_FLUSH, _K_FREE
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    """Engine-facing knobs for ``ServingEngine.run(pipeline=...)``.
+
+    ``queue_cap`` bounds every stage's ingress backlog (instances waiting to
+    start service); ``None`` disables backpressure and reproduces the flat
+    engine's unbounded-queue numbers.  ``fanout`` selects deterministic or
+    correlated-stochastic per-frame fanout.
+    """
+
+    fanout: FanoutSpec = FanoutSpec()
+    queue_cap: "int | None" = None
+
+
+def run_pipeline(
+    dag: AppDAG,
+    stages: Mapping[str, ModuleStage],
+    n_frames: int,
+    *,
+    issue: "np.ndarray | None" = None,
+    clients: "ClosedLoopClients | None" = None,
+    pace: float = 1.0,
+    admission: "AdmissionController | None" = None,
+    tail: str = "flush",
+    seed: int = 0,
+) -> PipelineResult:
+    """Co-simulate ``n_frames`` frames through ``stages`` along ``dag``.
+
+    Exactly one of ``issue`` (open-loop: pre-drawn sorted issue times) and
+    ``clients`` (event-interleaved closed loop paced by completions; ``pace``
+    staggers the initial slot starts) must be given.  ``admission`` sheds at
+    the issue instant against live state.  ``tail`` governs end-of-stream
+    leftovers on timeout-less machines (``"flush"`` / ``"drop"``).
+    """
+    if tail not in ("flush", "drop"):
+        raise ValueError(f"unknown tail policy {tail!r}")
+    if (issue is None) == (clients is None):
+        raise ValueError("need exactly one of issue= (open loop) or clients=")
+    rng = np.random.default_rng(seed)
+    topo = dag.topo_order()
+    torder = {m: i for i, m in enumerate(topo)}
+    parents = {m: sorted(dag.parents(m), key=torder.__getitem__) for m in topo}
+    children = {m: sorted(dag.children(m), key=torder.__getitem__) for m in topo}
+    sources = [m for m in topo if not parents[m]]
+    sink_set = {m for m in topo if not children[m]}
+
+    # -- per-frame state -----------------------------------------------------
+    issue_t = np.full(n_frames, np.nan)
+    shed = np.zeros(n_frames, dtype=bool)
+    lost = np.zeros(n_frames, dtype=bool)      # materialized instances, none done
+    resolved = np.zeros(n_frames, dtype=bool)
+    sink_bad = np.zeros(n_frames, dtype=bool)  # some sink never completed
+    sink_max = np.zeros(n_frames)
+    sinks_left = np.full(n_frames, len(sink_set), dtype=np.int64)
+    e2e = np.full(n_frames, np.nan)
+    avail = {m: np.full(n_frames, np.nan) for m in topo}
+    finish = {m: np.full(n_frames, np.nan) for m in topo}
+    pend = {m: np.zeros(n_frames, dtype=np.int64) for m in topo}
+    parents_left = {m: np.full(n_frames, len(parents[m]), dtype=np.int64) for m in topo}
+    child_void = {m: np.zeros(n_frames, dtype=bool) for m in topo}  # a parent skipped
+    child_avail = {m: np.zeros(n_frames) for m in topo}
+
+    attempts = 0
+    next_frame = 0      # closed-loop global frame counter
+    # per-stage stream accounting, so phantom injection knows when a stage's
+    # real stream is over: a stage is *done* once every frame is accounted
+    # there (entered, voided upstream, or shed at ingress) and no instance
+    # is still pending — a real frontend stops injecting dummies into a
+    # stage whose traffic has ended, and a self-perpetuating phantom chain
+    # would otherwise keep the heap non-empty forever
+    acc_count = {m: 0 for m in topo}
+    pend_total = {m: 0 for m in topo}
+
+    def stage_stream_done(m: str) -> bool:
+        return acc_count[m] >= n_frames and pend_total[m] == 0
+
+    heap: list = []
+    _seq = 0
+
+    def push(t: float, kind: int, stage: "str | None", payload) -> None:
+        nonlocal _seq
+        heapq.heappush(heap, (t, kind, _seq, stage, payload))
+        _seq += 1
+
+    # upstream machines held busy by undelivered outputs: (stage, mid) -> count
+    blocked: dict[tuple[str, int], int] = {}
+
+    def think() -> float:
+        if clients is None or clients.think_time <= 0.0:
+            return 0.0
+        if clients.think_dist == "const":
+            return clients.think_time
+        return float(rng.exponential(clients.think_time))
+
+    def deliver_to(st: ModuleStage, inst: Instance, now: float) -> None:
+        """Deliver one instance and revive a dormant phantom chain."""
+        st.deliver(inst, now, push)
+        if st.phantom_paused:
+            st.phantom_paused = False
+            period = 1.0 / st.phantom_target
+            st.anchor = now - st.delivered * period
+            push(now + period, _K_ARRIVE, None, ("phantom", st.name))
+
+    def finish_frame(f: int, t: float) -> None:
+        if resolved[f]:
+            return
+        resolved[f] = True
+        if not sink_bad[f] and not lost[f]:
+            e2e[f] = sink_max[f] - issue_t[f]
+        if clients is not None:
+            push(t + think(), _K_ARRIVE, None, ("issue", -1, 0))
+
+    def stage_resolved(m, f, t, done, entries, blocker) -> None:
+        """Frame ``f`` resolved at stage ``m`` (``done`` or void); propagate."""
+        if m in sink_set:
+            if done:
+                sink_max[f] = max(sink_max[f], t)
+            else:
+                sink_bad[f] = True
+            sinks_left[f] -= 1
+            if sinks_left[f] == 0:
+                finish_frame(f, t)
+        for c in children[m]:
+            if done:
+                child_avail[c][f] = max(child_avail[c][f], t)
+            else:
+                child_void[c][f] = True
+            parents_left[c][f] -= 1
+            if parents_left[c][f] == 0:
+                if child_void[c][f]:
+                    # a skipped/lost parent voids the child: the frame never
+                    # traverses it (seed semantics: finish 0 propagates drop)
+                    acc_count[c] += 1
+                    stage_resolved(c, f, t, False, entries, blocker)
+                else:
+                    entries.append((c, f, child_avail[c][f], blocker))
+
+    def enter_stage(m, f, t, blocker, entries, now) -> None:
+        """Frame ``f`` becomes available at ``m``; materialize its instances."""
+        acc_count[m] += 1
+        st = stages[m]
+        c = st.fanout.count(f)
+        if c == 0:
+            # zero-fanout skip: vacuously resolved, excluded downstream
+            stage_resolved(m, f, t, False, entries, blocker)
+            return
+        avail[m][f] = t
+        pend[m][f] = c
+        pend_total[m] += c
+        for _ in range(c):
+            inst = Instance(f, t)
+            if st.parked or not st.has_space:
+                st.parked.append((inst, blocker))
+                if blocker is not None:
+                    blocked[blocker] = blocked.get(blocker, 0) + 1
+            else:
+                deliver_to(st, inst, t)
+
+    def deliver_entries(entries, now) -> None:
+        """Deliver newly-available frames, frame-ordered within each stage —
+        the order the flat engine's stable ready-sort would produce."""
+        for c, f, t, blocker in sorted(
+            entries, key=lambda e: (torder[e[0]], e[1])
+        ):
+            enter_stage(c, f, t, blocker, entries_out := [], now)
+            if entries_out:
+                deliver_entries(entries_out, now)
+
+    def drain_parked(st: ModuleStage, now: float) -> bool:
+        delivered = False
+        while st.parked and st.has_space:
+            inst, blocker = st.parked.popleft()
+            deliver_to(st, inst, now)
+            delivered = True
+            if blocker is not None:
+                unblock(blocker, now)
+        return delivered
+
+    def unblock(key: tuple, now: float) -> None:
+        blocked[key] -= 1
+        if blocked[key] == 0:
+            del blocked[key]
+            um, umid = key
+            ust = stages[um]
+            ust.cores[umid].free(now)
+            if ust.start_next(umid, now, push):
+                drain_parked(ust, now)
+
+    def handle_instance_drop(m, f, t, entries) -> None:
+        pend[m][f] -= 1
+        pend_total[m] -= 1
+        if pend[m][f] == 0:
+            if math.isnan(finish[m][f]):
+                lost[f] = True
+                stage_resolved(m, f, t, False, entries, None)
+            else:
+                # partial completion: the frame proceeds with the instances
+                # that did finish (seed semantics: finish = max over done)
+                stage_resolved(m, f, float(finish[m][f]), True, entries, None)
+
+    def issue_frame(f: int, t: float, tries: int) -> None:
+        nonlocal attempts
+        if clients is not None:
+            attempts += 1
+        if admission is not None:
+            # live ingress occupancy: instances waiting (formation + queued
+            # + parked) at the source stages — the real quantity the PR-2
+            # virtual drain-rate queue approximated
+            backlog = sum(
+                stages[src].backlog + len(stages[src].parked) for src in sources
+            )
+            admitted = admission.admit_live(t, backlog)
+        else:
+            admitted = True
+        if admitted:
+            issue_t[f] = t
+            entries = []
+            for src in sources:
+                enter_stage(src, f, t, None, entries, t)
+            deliver_entries(entries, t)
+            return
+        if (
+            clients is not None
+            and clients.retry_on_shed
+            and tries < clients.max_retries
+        ):
+            delay = clients.backoff * (2.0 ** tries) * float(rng.uniform(0.5, 1.5))
+            push(t + delay, _K_ARRIVE, None, ("issue", f, tries + 1))
+            return
+        issue_t[f] = t
+        shed[f] = True
+        resolve_shed(f, t)
+
+    def resolve_shed(f: int, t: float) -> None:
+        resolved[f] = True
+        for m in topo:
+            acc_count[m] += 1  # a shed frame's stream position is spent
+        if clients is not None:
+            push(t + think(), _K_ARRIVE, None, ("issue", -1, 0))
+
+    # -- prime the loop ------------------------------------------------------
+    t_first = 0.0
+    if issue is not None:
+        issue = np.asarray(issue, dtype=np.float64)
+        if issue.shape != (n_frames,):
+            raise ValueError("issue times must have one entry per frame")
+        for i in range(n_frames):
+            push(float(issue[i]), _K_ARRIVE, None, ("issue", i, 0))
+        t_first = float(issue[0]) if n_frames else 0.0
+    else:
+        slots = clients.n_clients * clients.max_in_flight
+        for k in range(min(slots, n_frames)):
+            push(k / pace, _K_ARRIVE, None, ("issue", -1, 0))
+    for m in topo:
+        st = stages[m]
+        if st.phantom_target > 0.0:
+            st.anchor = t_first
+            push(t_first + 1.0 / st.phantom_target, _K_ARRIVE, None, ("phantom", m))
+
+    # -- main loop -----------------------------------------------------------
+    t_now = 0.0
+    while True:
+        if not heap:
+            # stream quiescent: resolve leftover partial batches (the flat
+            # core does this once at end of stream; interleaved clients can
+            # also quiesce mid-run when every slot waits on a stuck frame —
+            # flushing is then the only causally-consistent way forward).
+            # One stage per round, earliest in topo order: an upstream tail
+            # flush can still deliver members that complete a downstream
+            # batch, so later stages must not flush until everything above
+            # them has fully drained (the flat engine replays whole modules
+            # in topo order for exactly this reason).
+            acted = False
+            for m in topo:
+                st = stages[m]
+                entries: list = []
+                for mid, core in st.cores.items():
+                    if not core.buf:
+                        continue
+                    reals = [i for i in core.buf if i.real]
+                    if reals and core.timeout is not None:
+                        continue  # an armed deadline event is still coming
+                    if reals and tail == "flush":
+                        # flush at the last REAL member's ready time: the
+                        # frontend stops injecting phantoms once the stream
+                        # ends (single-module reference semantics)
+                        t_last = max(i.ready for i in reals)
+                        st.close(mid, batch_ready=t_last, now=t_last, push=push)
+                    else:
+                        for inst in st.discard_leftover(mid):
+                            handle_instance_drop(m, inst.frame, t_now, entries)
+                    acted = True  # the non-empty buffer was emptied either way
+                if entries:
+                    deliver_entries(entries, t_now)
+                acted |= drain_parked(st, t_now)
+                if acted:
+                    break
+            if not acted and not heap:
+                break
+            continue
+        t, kind, _s, stage_name, payload = heapq.heappop(heap)
+        t_now = max(t_now, t)
+        if kind == _K_ARRIVE:
+            what = payload[0]
+            if what == "issue":
+                _, f, tries = payload
+                if f == -1:
+                    if next_frame >= n_frames:
+                        continue  # stream exhausted: slot retires
+                    f, tries = next_frame, 0
+                    next_frame += 1
+                issue_frame(f, t, tries)
+            else:  # adaptive phantom injection at one stage
+                _, m = payload
+                st = stages[m]
+                if stage_stream_done(m):
+                    continue  # this stage's real stream is over: chain dies
+                period = 1.0 / st.phantom_target
+                if st.delivered == 0:
+                    # pad only from the first real arrival onward (the flat
+                    # injector spans the real stream): go dormant rather
+                    # than warm an idle stage — or keep the heap alive while
+                    # an upstream wedge waits for the quiescence flush; the
+                    # first delivery revives the chain (deliver_to)
+                    st.phantom_paused = True
+                    continue
+                # half-slot grace: upstream batch completions land in bursts
+                # that tie with the slot boundary (arrivals pop before
+                # same-time frees), so only a genuine >1.5-slot lag pads
+                due = st.anchor + (st.delivered + 1.5) * period
+                if t >= due - 1e-12:
+                    # collection fell behind target * elapsed: pad with one
+                    # phantom (the flat injector's deficit-padding expressed
+                    # causally), then resync the anchor so the stage is
+                    # considered paid-up through now — old deficit is
+                    # forgiven rather than burst-injected, and total
+                    # arrivals stay rate-limited at the target
+                    if st.has_space and not st.parked:
+                        st.stats.phantom += 1
+                        st.deliver(Instance(-1, t), t, push)
+                    else:
+                        # full stage: go dormant instead of re-pushing — a
+                        # self-perpetuating chain would keep the heap alive
+                        # forever while the wedged stage waits for the
+                        # quiescence flush that only an empty heap triggers;
+                        # the next delivery revives the chain (deliver_to)
+                        st.phantom_paused = True
+                        continue
+                    st.anchor = t - st.delivered * period
+                    push(t + period, _K_ARRIVE, None, ("phantom", m))
+                else:
+                    # real arrivals kept the collect rate at target: check
+                    # again when the next slot comes due
+                    push(due, _K_ARRIVE, None, ("phantom", m))
+        elif kind == _K_FREE:
+            # collect every machine-free at this instant before delivering,
+            # so cross-machine outputs land downstream in frame order
+            frees = [(stage_name, payload[0])]
+            while heap and heap[0][0] == t and heap[0][1] == _K_FREE:
+                _t, _k, _s2, sn, pl = heapq.heappop(heap)
+                frees.append((sn, pl[0]))
+            entries = []
+            finished: list[tuple[str, int, int]] = []
+            for m, mid in frees:
+                st = stages[m]
+                members = st.in_service.pop(mid)
+                for inst in members:
+                    if not inst.real:
+                        continue
+                    f = inst.frame
+                    st.stats.latencies.append(t - inst.ready)
+                    pend[m][f] -= 1
+                    pend_total[m] -= 1
+                    fm = finish[m]
+                    fm[f] = t if math.isnan(fm[f]) else max(fm[f], t)
+                    if pend[m][f] == 0:
+                        finished.append((m, mid, f))
+            for m, mid, f in finished:
+                stage_resolved(m, f, float(finish[m][f]), True, entries, (m, mid))
+            deliver_entries(entries, t)
+            # two passes: free every machine whose outputs fully delivered,
+            # THEN drain backpressured stages.  A drain can unblock (free +
+            # restart) a machine whose own free event sits in this very
+            # batch — freeing it again afterwards would double-start it.
+            for m, mid in frees:
+                st = stages[m]
+                if blocked.get((m, mid), 0) == 0:
+                    st.cores[mid].free(t)
+                    st.start_next(mid, t, push)
+                # else: outputs parked downstream — the machine stays busy
+                # until the backpressured stage drains (see unblock)
+            for m, mid in frees:
+                drain_parked(stages[m], t)
+        else:  # _K_FLUSH
+            st = stages[stage_name]
+            mid, token = payload
+            core = st.cores[mid]
+            if token == core.token and core.buf:
+                st.close(mid, batch_ready=t, now=t, push=push)
+                drain_parked(st, t)
+
+    # anything still unresolved is wedged in-pipeline: account as dropped
+    for f in range(n_frames):
+        if not resolved[f]:
+            if math.isnan(issue_t[f]):
+                shed[f] = True
+            else:
+                lost[f] = True
+                sink_bad[f] = True
+
+    completed = ~np.isnan(e2e)
+    dropped = lost & ~shed & ~completed
+    skipped = ~completed & ~shed & ~dropped
+    return PipelineResult(
+        modules=tuple(topo),
+        sp=dag.sp,
+        issue=issue_t,
+        e2e=e2e,
+        avail=avail,
+        finish=finish,
+        shed=shed,
+        dropped=dropped,
+        skipped=skipped,
+        stats={m: stages[m].stats for m in topo},
+        attempts=attempts,
+    )

@@ -1,0 +1,218 @@
+"""Composable DAG stages: one module's machines behind a bounded ingress.
+
+A :class:`ModuleStage` wraps the single-machine cores of
+`repro.serving.events.MachineCore` into one DAG stage: an *incremental*
+dispatcher assigns instances to machines in arrival order (the streaming
+form of `core.dispatch.dispatch_runs` — the static run-length walk cannot be
+precomputed because the pipelined arrival stream only exists as the
+co-simulation unfolds), formation buffers fill/flush exactly like the
+single-module reference core, and a bounded ingress backlog exerts
+**backpressure**: when ``queue_cap`` instances are already waiting to start
+service, further deliveries park FIFO and the *upstream machine that
+produced them stays busy* until the stage drains — the cross-stage
+interference Harpagon's per-module WCL sums cannot see.
+
+The stage owns no event loop; `repro.serving.pipeline.core` drives every
+stage of the app DAG from one global heap.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Mapping, Sequence
+
+from ...core.dispatch import Machine, Policy
+from ..events import MachineCore
+
+
+class Instance:
+    """One module-level request of one frame (``frame == -1``: phantom)."""
+
+    __slots__ = ("frame", "ready")
+
+    def __init__(self, frame: int, ready: float = 0.0):
+        self.frame = frame
+        self.ready = ready
+
+    @property
+    def real(self) -> bool:
+        return self.frame >= 0
+
+
+class TCDispatcher:
+    """Incremental weighted-fair batch walk (Harpagon TC dispatch).
+
+    Machine *i* owns periodic run slots at ``k * b_i / f_i`` merged by
+    ``(slot time, -ratio, index)``; consecutive arrivals fill the current
+    run (one batch) before the walk advances — request-for-request identical
+    to `core.dispatch.dispatch_runs(policy=TC)` on the same stream.
+    """
+
+    def __init__(self, machines: Sequence[Machine]):
+        self.machines = list(machines)
+        self._next_t = [0.0] * len(self.machines)
+        self._cur = 0
+        self._left = 0
+
+    def assign(self) -> int:
+        if self._left == 0:
+            i = min(
+                range(len(self.machines)),
+                key=lambda j: (self._next_t[j], -self.machines[j].config.ratio, j),
+            )
+            self._cur = i
+            m = self.machines[i]
+            self._left = m.config.batch
+            self._next_t[i] += m.config.batch / m.rate
+        self._left -= 1
+        return self.machines[self._cur].mid
+
+
+class RRDispatcher:
+    """Deficit-counter weighted round-robin of individual requests (RR/DT),
+    request-for-request identical to `dispatch_runs` under those policies."""
+
+    def __init__(self, machines: Sequence[Machine]):
+        self.machines = list(machines)
+        self._credit = [0.0] * len(self.machines)
+        self._tot = sum(m.rate for m in self.machines)
+
+    def assign(self) -> int:
+        for i, m in enumerate(self.machines):
+            self._credit[i] += m.rate / self._tot
+        j = max(range(len(self.machines)), key=lambda i: self._credit[i])
+        self._credit[j] -= 1.0
+        return self.machines[j].mid
+
+
+def make_dispatcher(machines: Sequence[Machine], policy: Policy):
+    if policy is Policy.TC:
+        return TCDispatcher(machines)
+    return RRDispatcher(machines)
+
+
+@dataclass
+class StageStats:
+    """Per-stage accounting, mirror of the engine's ``ModuleStats`` fields."""
+
+    latencies: list[float] = field(default_factory=list)
+    batches: int = 0
+    dropped: int = 0
+    phantom: int = 0
+
+
+class ModuleStage:
+    """One DAG module as a pipeline stage: dispatcher + cores + backlog.
+
+    ``timeout`` is a single flush deadline or a per-machine-id mapping (the
+    engine's ``"budget"`` resolution).  ``phantom_target`` > 0 streams the
+    plan's priced phantom traffic *adaptively*: the stage pads batch
+    formation up to that total collect rate (``sum(rate + dummy)``), so a
+    phantom is injected only when real traffic has left a gap — the
+    event-interleaved analogue of the flat frontend's pad-to-provisioned
+    injector (`frontend.dummy.phantom_times`).  ``queue_cap`` bounds the
+    number of instances waiting to start service; ``None`` means unbounded
+    (no backpressure — the flat-engine regime).
+    """
+
+    def __init__(
+        self,
+        name: str,
+        machines: Sequence[Machine],
+        policy: Policy,
+        *,
+        timeout: "float | None | Mapping[int, float]" = None,
+        fanout=None,
+        phantom_target: float = 0.0,
+        queue_cap: "int | None" = None,
+    ):
+        if queue_cap is not None and queue_cap < 1:
+            raise ValueError("queue_cap must be >= 1 (or None for unbounded)")
+        if queue_cap is not None:
+            # formation buffers count toward the backlog, so a cap below the
+            # largest batch size could never form a full batch: floor it
+            queue_cap = max(queue_cap, max(m.config.batch for m in machines))
+        if isinstance(timeout, Mapping):
+            t_of = {m.mid: timeout.get(m.mid) for m in machines}
+        else:
+            t_of = {m.mid: timeout for m in machines}
+        self.name = name
+        self.machines = list(machines)
+        self.cores = {m.mid: MachineCore(m, t_of[m.mid]) for m in machines}
+        self.dispatcher = make_dispatcher(machines, policy)
+        self.fanout = fanout
+        self.phantom_target = float(phantom_target)
+        # phantom pacing state: a phantom is due when `delivered` (real +
+        # phantom arrivals since `anchor`) falls behind target * elapsed —
+        # total collection is padded up to, and rate-limited at, the target
+        self.anchor = 0.0
+        self.delivered = 0
+        # True while the injection chain is dormant (stage was full): a
+        # dormant chain schedules no events, so a wedged pipeline can reach
+        # quiescence and flush; the next successful delivery revives it
+        self.phantom_paused = False
+        self.queue_cap = queue_cap
+        self.backlog = 0  # instances delivered but not yet started service
+        # deliveries parked by backpressure: (instance, blocker) where
+        # blocker is the (stage, mid) whose outputs they are, or None for
+        # ingress arrivals (open-loop frames waiting at the source)
+        self.parked: deque = deque()
+        self.in_service: dict[int, list[Instance]] = {}
+        self.stats = StageStats()
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def has_space(self) -> bool:
+        return self.queue_cap is None or self.backlog < self.queue_cap
+
+    # -- formation / service -------------------------------------------------
+    def deliver(self, inst: Instance, now: float, push: Callable) -> None:
+        """Hand one instance to the dispatcher at time ``now``.
+
+        ``push(t, kind, stage_name, payload)`` schedules flush/free events on
+        the owner's heap.  Caller must have checked :attr:`has_space`.
+        """
+        inst.ready = now
+        self.delivered += 1
+        self.backlog += 1
+        mid = self.dispatcher.assign()
+        core = self.cores[mid]
+        deadline = core.add(inst, now, inst.real)
+        if deadline is not None:
+            push(deadline, _K_FLUSH, self.name, (mid, core.token))
+        if core.full:
+            self.close(mid, batch_ready=now, now=now, push=push)
+
+    def close(self, mid: int, batch_ready: float, now: float, push: Callable) -> None:
+        self.cores[mid].close(batch_ready)
+        self.start_next(mid, now, push)
+
+    def start_next(self, mid: int, now: float, push: Callable) -> bool:
+        """Start the next queued batch on ``mid`` (unless backpressured)."""
+        core = self.cores[mid]
+        started = core.start(now, lambda members: core.machine.config.duration)
+        if started is None:
+            return False
+        end, members = started
+        self.stats.batches += 1
+        self.backlog -= len(members)
+        self.in_service[mid] = members
+        push(end, _K_FREE, self.name, (mid,))
+        return True
+
+    def discard_leftover(self, mid: int) -> list[Instance]:
+        """End-of-stream drop of the open buffer; returns real instances."""
+        all_members = self.cores[mid].discard()
+        self.backlog -= len(all_members)
+        dropped = [i for i in all_members if i.real]
+        self.stats.dropped += len(dropped)
+        return dropped
+
+
+# event kinds of the pipeline's global heap (core.py re-exports): arrivals
+# first (a request landing exactly at a deadline joins the batch), then
+# machine-frees (upstream completions must deliver before a downstream flush
+# at the same instant fires), then flushes.  FREE-before-FLUSH within one
+# stage is outcome-equivalent to the single-module core's FLUSH-before-FREE
+# (both orders start the same FIFO batch at the same time).
+_K_ARRIVE, _K_FREE, _K_FLUSH = 0, 1, 2
