@@ -98,8 +98,20 @@ def total_rate(allocs: list[Alloc]) -> float:
     return sum(a.rate for a in allocs)
 
 
+def collect_capacity(allocs: list[Alloc]) -> float:
+    """Provisioned batch-collection capacity ``sum(machines * derate * t)``.
+
+    For scheduler-produced allocations this equals ``sum(rate + dummy)`` —
+    the total traffic (real + streamed phantom) the machines are paid to
+    collect.  The control plane's replan reuses a module whose new rate
+    still fits under this capacity: the dummy share absorbs the drift.
+    """
+    return sum(a.machines * a.cap for a in allocs)
+
+
 def config_wcl(
-    config: Config, policy: Policy, *, collect_rate: float, full: bool = True
+    config: Config, policy: Policy, *, collect_rate: float, full: bool = True,
+    burst: float = 0.0,
 ) -> float:
     """Worst-case latency of ONE machine at ``config``.
 
@@ -107,6 +119,16 @@ def config_wcl(
     * TC: the remaining workload ``w`` (Theorem 1),
     * RR full machine: its own throughput; RR partial: its assigned rate,
     * DT: its own throughput always.
+
+    ``burst`` is a burst-aware collection correction (seconds): downstream
+    of a batched stage, arrivals come quantized in upstream batch
+    completions, so any machine whose batch waits on arrivals can straddle
+    an inter-completion gap of up to one upstream batch's arrival quantum
+    ``b_up / rate_up`` beyond the steady-state ``b / w`` fill time —
+    `scheduler.get_wcl` applies it to full and tail machines alike (a full
+    machine with a short fill time straddles the gap just the same); the
+    RR/DT ``2d`` short-circuit below skips it, so that caller adds it
+    explicitly.
     """
     d, b = config.duration, config.batch
     if policy is Policy.DT_OPT:
@@ -115,7 +137,7 @@ def config_wcl(
         return 2.0 * d  # RR: local collection at own throughput; DT: d + b/t
     if collect_rate <= _EPS:
         return math.inf
-    return d + b / collect_rate
+    return d + b / collect_rate + burst
 
 
 def module_wcl(allocs: list[Alloc], policy: Policy) -> float:

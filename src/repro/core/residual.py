@@ -61,6 +61,7 @@ def apply_dummy(
     policy: Policy,
     *,
     headroom: float = 0.0,
+    burst: float = 0.0,
 ) -> tuple[float, list[Alloc]]:
     """Try Theorem-2 dummy padding; returns (dummy_rate, allocs) of the best result."""
     best_cost = total_cost(allocs)
@@ -70,7 +71,9 @@ def apply_dummy(
         dum = t_i - u
         if dum <= _EPS or u <= _EPS:
             continue  # nothing below this config, or already saturated
-        ok, cand = generate_config(T + dum, L, profile, policy, headroom=headroom)
+        ok, cand = generate_config(
+            T + dum, L, profile, policy, headroom=headroom, burst=burst
+        )
         if ok and total_cost(cand) < best_cost - 1e-12:
             best_cost = total_cost(cand)
             best = (dum, cand)
@@ -86,6 +89,7 @@ def apply_reassign(
     policy: Policy,
     *,
     headroom: float = 0.0,
+    burst: float = 0.0,
 ) -> tuple[list[Alloc], float]:
     """Re-run Algorithm 1 on the residual workload with budget ``L + extra``.
 
@@ -100,7 +104,9 @@ def apply_reassign(
     if residual_rate <= _EPS:
         return allocs, 0.0
     base_cost = total_cost(allocs)
-    ok, cand = generate_config(residual_rate, L + extra, profile, policy, headroom=headroom)
+    ok, cand = generate_config(
+        residual_rate, L + extra, profile, policy, headroom=headroom, burst=burst
+    )
     if not ok:
         return allocs, 0.0
     new_allocs = [majority] + cand
@@ -121,6 +127,7 @@ def schedule_module(
     use_dummy: bool = True,
     k_tuples: int | None = None,
     headroom: float = 0.0,
+    burst: float = 0.0,
 ) -> ModuleSchedule | None:
     """Algorithm 1 (+ optional dummy generator) for one module.
 
@@ -131,12 +138,14 @@ def schedule_module(
     from .scheduler import generate_config_ktuple  # local: avoid cycle
 
     if k_tuples is None:
-        ok, allocs = generate_config(T, L, profile, policy, headroom=headroom)
+        ok, allocs = generate_config(T, L, profile, policy, headroom=headroom, burst=burst)
     else:
         ok, allocs = generate_config_ktuple(T, L, profile, policy, k_tuples)
     if not ok:
         return None
     dummy = 0.0
     if use_dummy and k_tuples is None:
-        dummy, allocs = apply_dummy(T, L, profile, allocs, policy, headroom=headroom)
+        dummy, allocs = apply_dummy(
+            T, L, profile, allocs, policy, headroom=headroom, burst=burst
+        )
     return ModuleSchedule(module, T, dummy, L, tuple(allocs), policy)

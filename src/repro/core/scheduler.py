@@ -23,7 +23,8 @@ _EPS = 1e-9
 
 
 def get_wcl(
-    config: Config, policy: Policy, rw: float, *, full: bool, headroom: float = 0.0
+    config: Config, policy: Policy, rw: float, *, full: bool, headroom: float = 0.0,
+    burst: float = 0.0,
 ) -> float:
     """L_wc estimate for a machine at ``config`` when ``rw`` workload remains.
 
@@ -31,19 +32,29 @@ def get_wcl(
     ``(1 - headroom) * throughput`` traffic, so under RR/DT it collects at
     that derated capacity instead of its own throughput (TC collection is the
     remaining *real* workload either way — Theorem 1 is headroom-invariant).
+
+    ``burst`` (seconds) is the burst-aware collection correction downstream
+    of batched stages (see `dispatch.config_wcl`).  It applies to every
+    machine whose batch actually waits on arrivals: a short-fill machine
+    (full or tail) straddles an upstream inter-completion gap just the same.
     """
     if policy is Policy.TC:
-        return config_wcl(config, policy, collect_rate=rw)
+        return config_wcl(config, policy, collect_rate=rw, burst=burst)
     if policy in (Policy.RR, Policy.DT):
         # sound model: full machines collect at their own throughput (2d);
         # partial machines cannot collect faster than their assigned rate.
         if headroom > 0.0:
             cap = config.throughput * (1.0 - headroom)
             return config_wcl(
-                config, policy, collect_rate=(cap if full else min(rw, cap)), full=False
+                config, policy, collect_rate=(cap if full else min(rw, cap)),
+                full=False, burst=burst,
             )
         rate = config.throughput if full else rw
-        return config_wcl(config, policy, collect_rate=rate, full=full)
+        if full:
+            # 2d short-circuit in config_wcl skips the burst term; a full
+            # machine's local collection is still arrival-quantized
+            return config_wcl(config, policy, collect_rate=rate, full=True) + burst
+        return config_wcl(config, policy, collect_rate=rate, full=False, burst=burst)
     return config_wcl(config, policy, collect_rate=config.throughput)  # DT_OPT
 
 
@@ -74,6 +85,7 @@ def generate_config(
     policy: Policy = Policy.TC,
     *,
     headroom: float = 0.0,
+    burst: float = 0.0,
 ) -> tuple[bool, list[Alloc]]:
     """Paper Algorithm 1: greedy multi-tuple configuration generation.
 
@@ -83,6 +95,11 @@ def generate_config(
     batches (the paper's zero-slack pacing permanently loses throughput to
     any partial flush).  Feasibility is still checked against the *real*
     collection rates, so the WCL model stays honest.
+
+    ``burst`` (seconds) applies the burst-aware tail correction: a fractional
+    tail machine's feasibility is checked at ``d + b/w + burst``, so modules
+    fed by upstream batch completions don't get tails whose realized
+    collection straddles an upstream inter-batch gap past their budget.
     """
     if not 0.0 <= headroom < 1.0:
         raise ValueError(f"headroom must be in [0, 1), got {headroom}")
@@ -100,7 +117,7 @@ def generate_config(
         cap = c.throughput * derate
         n = rw / cap
         full = n >= 1.0 - 1e-12
-        if get_wcl(c, policy, rw, full=full, headroom=headroom) <= L + _EPS:
+        if get_wcl(c, policy, rw, full=full, headroom=headroom, burst=burst) <= L + _EPS:
             if full:
                 nfull = math.floor(n + 1e-12)
                 allocs.append(Alloc(c, float(nfull), nfull * cap, derate=derate))
@@ -119,7 +136,7 @@ def generate_config(
                 # back to DUMMY-FILLING one machine: the frontend pads the
                 # residual to a full machine's throughput, so the batch
                 # collects at rate t (L_wc = 2d) at the price of one machine.
-                fill = _dummy_fill(rw, L, configs, policy, headroom=headroom)
+                fill = _dummy_fill(rw, L, configs, policy, headroom=headroom, burst=burst)
                 if fill is None:
                     return False, []
                 allocs.append(fill)
@@ -130,15 +147,22 @@ def generate_config(
 
 
 def _dummy_fill(
-    rw: float, L: float, configs, policy: Policy, *, headroom: float = 0.0
+    rw: float, L: float, configs, policy: Policy, *, headroom: float = 0.0,
+    burst: float = 0.0,
 ) -> Alloc | None:
-    """Cheapest single machine that can carry ``rw`` when padded with dummies."""
+    """Cheapest single machine that can carry ``rw`` when padded with dummies.
+
+    The burst correction applies here too: the padding phantoms are injected
+    at the frontend's rate-limited pace, so a bursty upstream still leaves
+    the dummy-filled machine's collection quantized by its real arrivals.
+    """
     derate = 1.0 - headroom
     best = None
     for c in configs:
         if c.throughput * derate < rw - _EPS:
             continue
-        if get_wcl(c, policy, c.throughput * derate, full=True, headroom=headroom) > L + _EPS:
+        wcl = get_wcl(c, policy, c.throughput * derate, full=True, headroom=headroom)
+        if wcl + burst > L + _EPS:
             continue
         if best is None or c.unit_price < best.unit_price:
             best = c

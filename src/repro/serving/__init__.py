@@ -21,6 +21,12 @@ Layers, ingress to silicon:
   completions, bounded queues exert backpressure, per-frame fanout can be
   stochastic and sibling-correlated, clients/admission live inside the
   event loop.  Selected via ``ServingEngine.run(pipeline=True)``.
+* ``control``   — the incremental control plane (pipeline mode only):
+  windowed trend-forecast rate estimation, warm-start ``Planner.replan``
+  at every epoch, and hot-swap of the resulting ``PlanDelta`` onto the
+  live stages without dropping in-flight frames.  Selected via
+  ``ServingEngine.run(pipeline=True, control=ControlLoopConfig(...))``;
+  the per-epoch audit trail is returned as ``ServeResult.epochs``.
 * ``simulator`` — module-level Theorem-1 validation harness.
 * ``reference`` — the frozen seed loops (golden equivalence baselines).
 
@@ -57,6 +63,7 @@ from .arrivals import (
     trace_arrivals,
     uniform_arrivals,
 )
+from .control import ControlLoopConfig, ControlRuntime, EpochRecord, serving_cost
 from .engine import ModuleStats, ServeResult, ServingEngine
 from .events import simulate_module_events
 from .frontend import (
@@ -74,6 +81,9 @@ from .simulator import SimResult, simulate
 __all__ = [
     "ARRIVALS",
     "ClosedLoopClients",
+    "ControlLoopConfig",
+    "ControlRuntime",
+    "EpochRecord",
     "FanoutSpec",
     "FrontendConfig",
     "ModuleReplay",
@@ -93,6 +103,7 @@ __all__ = [
     "poisson_arrivals",
     "replay_machine",
     "replay_module",
+    "serving_cost",
     "simulate",
     "simulate_module_events",
     "simulate_reference",

@@ -1,0 +1,275 @@
+"""Incremental serving control plane: rate estimation, replanning, hot-swap.
+
+Harpagon's planner derives one static plan for a fixed per-module rate, but
+real arrival processes are diurnal and bursty: a single plan must be
+provisioned for the peak and wastes machines the rest of the day — the
+exact serving-cost inefficiency the paper targets, one level up.  This
+module closes the loop (in the direction of OCTOPINF-style workload-aware
+re-scheduling): a :class:`ControlRuntime` lives *inside* the pipelined
+event loop, estimates the offered frame rate over a sliding window, calls
+`Planner.replan` (warm-start incremental repair, versioned plans) at every
+epoch boundary, and applies the resulting `PlanDelta` to the live stages
+without dropping an in-flight frame:
+
+* **drained machines finish their open batch** (closed at the swap instant)
+  and their queued work, then retire from dispatch;
+* **added machines join the dispatch walk immediately** — under
+  ``timeout="budget"`` their flush deadlines come from the new schedule's
+  per-rank remaining workloads (`dispatch.remaining_workloads`);
+* **dummy streamers re-anchor** to the new provisioned collect rate;
+* **admission controllers re-bind** their provisioned-rate policies to the
+  new plan (`AdmissionController.rebind`), and closed-loop clients with
+  ``backoff=None`` re-read the live plan's modeled latency on every retry.
+
+Every epoch appends an :class:`EpochRecord` to :attr:`ControlRuntime.history`
+(surfaced as ``ServeResult.epochs``), so a run's serving cost is auditable
+as the time-integral of the active plan's cost — the quantity
+``benchmarks.run --only diurnal_sweep`` compares against static peak
+provisioning.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Mapping, Sequence
+
+from ..core.dispatch import Machine, expand_machines
+from ..core.harpagon import Plan, Planner
+from ..core.profiles import ModuleProfile
+from .frontend.admission import AdmissionController
+from .pipeline.stages import StageUpdate
+
+
+@dataclass(frozen=True)
+class ControlLoopConfig:
+    """Engine-facing knobs for ``ServingEngine.run(..., control=...)``.
+
+    ``interval`` is the epoch length in simulated seconds; ``window`` the
+    arrival-rate estimation window (default: one interval).  ``forecast``
+    extrapolates the windowed estimate's trend one epoch ahead (two
+    half-window rates -> slope), so a diurnal ramp is provisioned for where
+    the rate *will be* when the next plan is live, not where it was half a
+    window ago.  ``margin`` over-provisions on top (``target = est * (1 +
+    margin)``) to absorb estimate noise and burn down backlog accumulated
+    while under-provisioned.  ``tolerance`` / ``cost_guard`` are forwarded
+    to `Planner.replan`.  ``floor`` bounds the estimate from below as a
+    fraction of the initially provisioned frame rate, so a lull can never
+    replan to a zero-machine cluster.
+    """
+
+    interval: float
+    profiles: "Mapping[str, ModuleProfile] | None" = None
+    window: "float | None" = None
+    margin: float = 0.1
+    forecast: bool = True
+    tolerance: float = 0.02
+    cost_guard: float = 0.01
+    floor: float = 0.3
+
+    def __post_init__(self):
+        if self.interval <= 0.0:
+            raise ValueError("control interval must be positive")
+        if self.window is not None and self.window <= 0.0:
+            raise ValueError("estimation window must be positive")
+        if self.margin < 0.0:
+            raise ValueError("margin must be >= 0")
+        if not 0.0 < self.floor <= 1.0:
+            raise ValueError("floor must be in (0, 1]")
+
+
+@dataclass(frozen=True)
+class EpochRecord:
+    """One control-loop epoch, auditable: what was observed, what was done."""
+
+    t: float                     # epoch boundary (simulated seconds)
+    rate_est: float              # windowed offered frame-rate estimate
+    target: float                # provisioned frame rate = est * (1 + margin)
+    version: int                 # plan version active from t on
+    cost: float                  # that plan's cost (serving-cost integrand)
+    feasible: bool               # False: replan failed, previous plan kept
+    swapped: bool                # True: a non-empty delta was applied
+    actions: Mapping[str, str]   # per-module replan provenance
+    machines_added: float = 0.0
+    machines_drained: float = 0.0
+    delta_summary: str = ""
+
+
+def plan_e2e_hint(plan: Plan) -> float:
+    """A finite, positive latency estimate for ``plan`` (SLO fallback).
+
+    Used as the base for closed-loop clients' live retry backoff — shared
+    by the engine (control off) and :attr:`ControlRuntime.e2e_hint` so the
+    two paths can never diverge.
+    """
+    e = plan.e2e_latency
+    if math.isfinite(e) and e > 0.0:
+        return e
+    return max(plan.workload.slo, 1e-3)
+
+
+def serving_cost(history: Sequence[EpochRecord], horizon: float) -> float:
+    """Time-averaged serving cost over ``[history[0].t, horizon]``.
+
+    The active plan's cost integrates piecewise-constantly between epochs —
+    the honest trajectory metric a periodic replanner is buying down
+    against a static peak plan's flat ``cost * horizon``.
+    """
+    if not history:
+        return math.nan
+    total = 0.0
+    for rec, t_next in zip(
+        history, [r.t for r in history[1:]] + [max(horizon, history[-1].t)]
+    ):
+        total += rec.cost * max(0.0, t_next - rec.t)
+    span = max(horizon, history[-1].t) - history[0].t
+    return total / span if span > 0 else history[-1].cost
+
+
+class ControlRuntime:
+    """The live control plane driven by the pipelined event loop.
+
+    The loop calls :meth:`observe` for every offered frame and
+    :meth:`on_epoch` at each ``_K_EPOCH`` event; the runtime returns the
+    per-stage :class:`StageUpdate` mapping to apply (or ``None`` when the
+    replanned schedule is unchanged / infeasible).  ``timeout_of`` resolves
+    a new schedule's flush deadlines exactly like the engine resolved the
+    initial ones, so swapped-in machines inherit the same ``"budget"``
+    semantics (per-rank remaining-workload floors included).
+    """
+
+    def __init__(
+        self,
+        cfg: ControlLoopConfig,
+        plan: Plan,
+        profiles: Mapping[str, ModuleProfile],
+        frame_rate: float,
+        *,
+        timeout_of: Callable[[object, "list[Machine]"], "float | None | dict"],
+        dummies: bool = False,
+        admission: "AdmissionController | None" = None,
+    ):
+        if frame_rate <= 0.0:
+            raise ValueError("frame_rate must be positive")
+        self.cfg = cfg
+        self.planner = Planner(plan.options)
+        self.plan = plan
+        self.profiles = profiles
+        self.frame_rate0 = frame_rate
+        wl = plan.workload
+        self.fanouts = {m: wl.rates[m] / frame_rate for m in wl.app.modules}
+        self.timeout_of = timeout_of
+        self.dummies = dummies
+        self.admission = admission
+        self._issues: deque[float] = deque()
+        self.history: list[EpochRecord] = [
+            EpochRecord(
+                t=0.0,
+                rate_est=frame_rate,
+                target=frame_rate,
+                version=plan.version,
+                cost=plan.cost,
+                feasible=plan.feasible,
+                swapped=False,
+                actions=dict(plan.provenance),
+            )
+        ]
+
+    @property
+    def interval(self) -> float:
+        return self.cfg.interval
+
+    @property
+    def e2e_hint(self) -> float:
+        """The live plan's modeled end-to-end latency (clients' backoff base)."""
+        return plan_e2e_hint(self.plan)
+
+    def observe(self, t: float) -> None:
+        self._issues.append(t)
+
+    def on_epoch(self, t: float) -> "dict[str, StageUpdate] | None":
+        """Estimate, replan, and emit the stage updates for epoch ``t``."""
+        cfg = self.cfg
+        if cfg.window is not None:
+            window = cfg.window
+        else:
+            # the trend extrapolation differentiates the window's two
+            # halves, amplifying their Poisson counting noise by the
+            # extrapolation distance over the half width — a multi-interval
+            # window keeps that below the provisioning margin
+            window = cfg.interval * (4.0 if cfg.forecast else 1.0)
+        # clamp to the elapsed run: the span before t=0 holds no
+        # observations, and treating it as an empty half-window would read
+        # a perfectly steady start-up as a 2x ramp
+        window = min(window, t) if t > 0.0 else window
+        dq = self._issues
+        while dq and dq[0] < t - window:
+            dq.popleft()
+        if cfg.forecast and window > 0.0:
+            # trend-aware estimate: rate over each half-window gives the
+            # slope; extrapolate from the recent half's center through the
+            # coming epoch so a ramp is provisioned at its arrival, not at
+            # its observation
+            half = window / 2.0
+            n2 = sum(1 for x in dq if x >= t - half)
+            r2 = n2 / half
+            r1 = (len(dq) - n2) / half
+            est = r2 + (r2 - r1) / half * (0.5 * half + cfg.interval)
+        else:
+            est = len(dq) / max(window, cfg.interval)
+        est = max(est, cfg.floor * self.frame_rate0)
+        target = est * (1.0 + cfg.margin)
+        new_rates = {m: target * f for m, f in self.fanouts.items()}
+        new_plan = self.planner.replan(
+            self.plan,
+            new_rates,
+            self.profiles,
+            tolerance=cfg.tolerance,
+            cost_guard=cfg.cost_guard,
+        )
+        if not new_plan.feasible:
+            # keep serving on the previous plan; the failed epoch is recorded
+            self.history.append(
+                EpochRecord(
+                    t=t, rate_est=est, target=target,
+                    version=self.plan.version, cost=self.plan.cost,
+                    feasible=False, swapped=False,
+                    actions=dict(new_plan.provenance),
+                )
+            )
+            return None
+        delta = self.plan.diff(new_plan)
+        self.plan = new_plan
+        updates: dict[str, StageUpdate] = {}
+        for m in delta.changed_modules:
+            s = new_plan.schedules[m]
+            if not s.allocs:
+                continue  # never swap a stage down to zero machines
+            machines = expand_machines(list(s.allocs))
+            updates[m] = StageUpdate(
+                machines=machines,
+                timeout=self.timeout_of(s, machines),
+                phantom_target=(
+                    sum(a.rate + a.dummy for a in s.allocs) if self.dummies else 0.0
+                ),
+            )
+        if self.admission is not None:
+            # admission policies bound to the provisioned rate follow the
+            # epoch's plan instead of the run-constant initial rate
+            self.admission.rebind(target)
+        self.history.append(
+            EpochRecord(
+                t=t, rate_est=est, target=target,
+                version=new_plan.version, cost=new_plan.cost,
+                feasible=True, swapped=bool(updates),
+                actions=dict(new_plan.provenance),
+                machines_added=sum(
+                    d.machines_added for d in delta.modules.values()
+                ),
+                machines_drained=sum(
+                    d.machines_drained for d in delta.modules.values()
+                ),
+                delta_summary=delta.summary() if updates else "",
+            )
+        )
+        return updates or None

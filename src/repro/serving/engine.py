@@ -85,6 +85,7 @@ class ServeResult:
     dropped: int = 0   # admitted frames lost mid-pipeline (tail drops etc.)
     attempts: int = 0  # closed-loop issue attempts incl. retries (0 = open loop)
     pipeline: "object | None" = None  # PipelineResult when run(pipeline=...)
+    epochs: "list | None" = None      # EpochRecords when run(control=...)
 
     @property
     def offered(self) -> int:
@@ -106,6 +107,62 @@ class ServeResult:
         if not self.e2e_latencies:
             return 0.0
         return float(np.quantile(np.asarray(self.e2e_latencies), 0.99))
+
+
+def resolve_module_timeout(
+    schedule,
+    machines: "list[Machine]",
+    timeout: "float | str | None",
+    policy: Policy,
+    *,
+    dummies: bool = False,
+) -> "float | None | dict[int, float]":
+    """Resolve the batch-collection deadline for one module schedule.
+
+    ``"budget"`` derives a per-machine deadline from the plan: each machine
+    must flush early enough that collection + its own service duration still
+    fits the module's latency budget.  A module-level function so the
+    control plane (`repro.serving.control`) can resolve deadlines for
+    hot-swapped schedules exactly like the engine resolves the initial ones.
+    """
+    if timeout is None or isinstance(timeout, (int, float)):
+        return timeout
+    if timeout == "budget":
+        s = schedule
+        if dummies:
+            # the frontend streams the plan's dummy traffic, so batches
+            # collect at the provisioned rate and the deadline can sit
+            # exactly at the modeled budget
+            return {
+                mm.mid: max(s.budget - mm.config.duration, 0.0)
+                for mm in machines
+            }
+        # floor at the real-rate fill time: dummy-padded plans assume the
+        # frontend injects phantom requests to speed collection, which the
+        # engine does not simulate — flushing faster than real traffic can
+        # fill a batch would silently overload the machine instead.  Under
+        # TC machine i's batch is a consecutive slice of the stream, but
+        # it fills at the *remaining* workload w_i (Theorem 1): a
+        # lower-ranked machine sees only the traffic dispatched at or
+        # below its rank, so its honest floor is longer than the whole-
+        # module fill time.  Under RR/DT a machine fills only at its own
+        # share of the traffic.
+        if policy is Policy.TC:
+            w_of = remaining_workloads(list(s.allocs))
+            def fill(mm: Machine) -> float:
+                return mm.config.batch / max(w_of.get(mm.mid, s.rate), 1e-12)
+        else:
+            tot = sum(mm.rate for mm in machines)
+            def fill(mm: Machine) -> float:
+                rate = s.rate
+                if tot > 0:
+                    rate *= mm.rate / tot
+                return mm.config.batch / max(rate, 1e-12)
+        return {
+            mm.mid: max(s.budget - mm.config.duration, fill(mm))
+            for mm in machines
+        }
+    raise ValueError(f"unknown timeout spec {timeout!r}")
 
 
 class ServingEngine:
@@ -134,6 +191,7 @@ class ServingEngine:
         frontend: FrontendConfig | None = None,
         offered_rate: float | None = None,
         pipeline: "bool | object" = False,
+        control: "object | None" = None,
     ) -> ServeResult:
         """Serve ``n_frames`` frames arriving at ``offered_rate`` (default:
         the provisioned ``frame_rate``) through the planned DAG.
@@ -150,17 +208,30 @@ class ServingEngine:
         `repro.serving.pipeline.PipelineConfig` for bounded queues and
         stochastic fanout); the default flat path replays modules in
         topological order with unbounded hand-off.
+
+        ``control`` (a `repro.serving.control.ControlLoopConfig`, pipeline
+        mode only) runs the incremental control plane inside the event loop:
+        windowed arrival-rate estimation, warm-start ``Planner.replan`` at
+        every epoch, and hot-swap of the resulting plan delta onto the live
+        stages.  The returned ``ServeResult.epochs`` carries the per-epoch
+        audit trail.  With ``control=None`` the path is bit-identical to
+        before the control plane existed.
         """
         fe = frontend or FrontendConfig()
         wl: Workload = self.plan.workload
         ctrl = make_admission(fe.admission, wl.app.name, frame_rate)
         if offered_rate is not None and offered_rate <= 0:
             raise ValueError("offered_rate must be positive")
+        if control is not None and not pipeline:
+            raise ValueError(
+                "control= (epoch-based plan hot-swap) requires pipeline mode: "
+                "the flat path replays whole modules and cannot swap mid-run"
+            )
         if pipeline:
             return self._run_pipeline(
                 n_frames, frame_rate, fe, ctrl,
                 arrivals=arrivals, seed=seed, timeout=timeout, tail=tail,
-                offered_rate=offered_rate, cfg=pipeline,
+                offered_rate=offered_rate, cfg=pipeline, control=control,
             )
         if fe.clients is not None:
             warnings.warn(
@@ -251,8 +322,10 @@ class ServingEngine:
         tail: str,
         offered_rate: float | None,
         cfg,
+        control=None,
     ) -> ServeResult:
         """Multi-module pipelined co-simulation (`repro.serving.pipeline`)."""
+        from .control import ControlLoopConfig, ControlRuntime, plan_e2e_hint
         from .pipeline import ModuleStage, PipelineConfig, make_stage_fanouts
         from .pipeline.core import run_pipeline
 
@@ -291,6 +364,29 @@ class ServingEngine:
                 phantom_target=target,
                 queue_cap=cfg.queue_cap,
             )
+        rt = None
+        if control is not None:
+            if not isinstance(control, ControlLoopConfig):
+                raise TypeError(
+                    f"control= expects ControlLoopConfig, got {control!r}"
+                )
+            if control.profiles is None:
+                raise ValueError(
+                    "control.profiles must carry the module profiles so "
+                    "Planner.replan can re-solve modules at epoch boundaries"
+                )
+            rt = ControlRuntime(
+                control,
+                self.plan,
+                control.profiles,
+                frame_rate,
+                timeout_of=lambda s_, machines_: resolve_module_timeout(
+                    s_, machines_, timeout, self.policy, dummies=fe.dummies
+                ),
+                dummies=fe.dummies,
+                admission=ctrl,
+            )
+        e2e_hint = plan_e2e_hint(self.plan)
         pace = offered_rate if offered_rate is not None else frame_rate
         if ctrl is not None:
             ctrl.reset()
@@ -298,13 +394,14 @@ class ServingEngine:
             res = run_pipeline(
                 wl.app, stages, n_frames,
                 clients=fe.clients, pace=pace, admission=ctrl,
-                tail=tail, seed=seed,
+                tail=tail, seed=seed, control=rt, e2e_hint=e2e_hint,
             )
         else:
             issue = make_arrivals(arrivals, n_frames, pace, seed=seed)
             res = run_pipeline(
                 wl.app, stages, n_frames,
                 issue=issue, admission=ctrl, tail=tail, seed=seed,
+                control=rt, e2e_hint=e2e_hint,
             )
         stats = {}
         for m in topo:
@@ -323,6 +420,7 @@ class ServingEngine:
             dropped=int(res.dropped.sum()),
             attempts=res.attempts,
             pipeline=res,
+            epochs=rt.history if rt is not None else None,
         )
 
     def _serve(
@@ -382,50 +480,9 @@ class ServingEngine:
         *,
         dummies: bool = False,
     ) -> "float | None | dict[int, float]":
-        """Resolve the batch-collection deadline for module ``m``.
-
-        ``"budget"`` derives a per-machine deadline from the plan: each
-        machine must flush early enough that collection + its own service
-        duration still fits the module's latency budget.
-        """
-        if timeout is None or isinstance(timeout, (int, float)):
-            return timeout
-        if timeout == "budget":
-            s = self.plan.schedules[m]
-            if dummies:
-                # the frontend streams the plan's dummy traffic, so batches
-                # collect at the provisioned rate and the deadline can sit
-                # exactly at the modeled budget
-                return {
-                    mm.mid: max(s.budget - mm.config.duration, 0.0)
-                    for mm in machines
-                }
-            # floor at the real-rate fill time: dummy-padded plans assume the
-            # frontend injects phantom requests to speed collection, which the
-            # engine does not simulate — flushing faster than real traffic can
-            # fill a batch would silently overload the machine instead.  Under
-            # TC machine i's batch is a consecutive slice of the stream, but
-            # it fills at the *remaining* workload w_i (Theorem 1): a
-            # lower-ranked machine sees only the traffic dispatched at or
-            # below its rank, so its honest floor is longer than the whole-
-            # module fill time.  Under RR/DT a machine fills only at its own
-            # share of the traffic.
-            if self.policy is Policy.TC:
-                w_of = remaining_workloads(list(s.allocs))
-                def fill(mm: Machine) -> float:
-                    return mm.config.batch / max(w_of.get(mm.mid, s.rate), 1e-12)
-            else:
-                tot = sum(mm.rate for mm in machines)
-                def fill(mm: Machine) -> float:
-                    rate = s.rate
-                    if tot > 0:
-                        rate *= mm.rate / tot
-                    return mm.config.batch / max(rate, 1e-12)
-            return {
-                mm.mid: max(s.budget - mm.config.duration, fill(mm))
-                for mm in machines
-            }
-        raise ValueError(f"unknown timeout spec {timeout!r}")
+        return resolve_module_timeout(
+            self.plan.schedules[m], machines, timeout, self.policy, dummies=dummies
+        )
 
     def _run_module(
         self,

@@ -61,9 +61,17 @@ class MachineCore:
 
     Members are opaque to the core (request ids here, per-frame instance
     entities in the pipelined co-simulation).
+
+    A core can be marked ``draining`` (control-plane hot swap): the owner
+    stops dispatching new members to it, its already-queued batches run to
+    completion, and once :attr:`drained` it holds no work and can be
+    retired — no in-flight member is ever dropped by a drain.
     """
 
-    __slots__ = ("machine", "timeout", "buf", "token", "armed", "queue", "free_at", "busy")
+    __slots__ = (
+        "machine", "timeout", "buf", "token", "armed", "queue", "free_at",
+        "busy", "draining",
+    )
 
     def __init__(self, machine: Machine, timeout: "float | None" = None):
         self.machine = machine
@@ -74,6 +82,12 @@ class MachineCore:
         self.queue: deque = deque()  # closed batches: (batch_ready, members)
         self.free_at = 0.0
         self.busy = False
+        self.draining = False        # excluded from dispatch; finishes its work
+
+    @property
+    def drained(self) -> bool:
+        """True when the core holds no work at any lifecycle stage."""
+        return not self.buf and not self.queue and not self.busy
 
     def add(self, member, t: float, is_real: bool) -> "float | None":
         """Append one member at time ``t``; returns a deadline to arm (the

@@ -19,6 +19,12 @@ seed numbers exactly):
   client with optional jittered retry-on-shed, run to a fixed point with
   the engine's simulated per-frame latencies.
 
+Under the incremental control plane (``repro.serving.control``) the
+frontend re-reads *per-epoch plan state* instead of run constants: an
+admission policy bound to the provisioned rate follows each hot-swapped
+plan (`AdmissionController.rebind`), and clients with ``backoff=None``
+wait about one *live* modeled service round between shed retries.
+
 Usage sketch::
 
     from repro.serving import ServingEngine

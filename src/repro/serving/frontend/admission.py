@@ -78,6 +78,25 @@ class AdmissionController:
             raise TypeError(f"unknown admission policy {policy!r}")
         self.reset()
 
+    def rebind(self, frame_rate: float) -> None:
+        """Re-read the provisioned frame rate (control-plane plan hot-swap).
+
+        Policies whose ``rate`` / ``drain_rate`` is ``None`` are bound to
+        the *provisioned* rate; under an epoch-based control loop that rate
+        is per-epoch plan state, not a run constant.  Rebinding preserves
+        the live bucket level / virtual queue — only the refill / drain
+        pace follows the new plan.  Explicit numeric policies are pinned by
+        the operator and do not move.
+        """
+        if frame_rate <= 0:
+            raise ValueError("frame_rate must be positive")
+        self.frame_rate = frame_rate
+        if isinstance(self.policy, TokenBucket):
+            if self.policy.rate is None:
+                self._rate = frame_rate
+        elif self.policy.drain_rate is None:
+            self._drain = frame_rate
+
     def reset(self) -> None:
         """Restore initial state (full bucket / empty queue)."""
         self.admitted = 0

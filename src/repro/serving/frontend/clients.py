@@ -54,7 +54,12 @@ class ClosedLoopClients:
     think_dist: str = "exp"
     retry_on_shed: bool = False
     max_retries: int = 3
-    backoff: float = 0.05     # base retry backoff, doubled per attempt, jittered
+    backoff: "float | None" = 0.05
+    #   base retry backoff, doubled per attempt, jittered.  ``None`` = re-read
+    #   the LIVE plan's modeled end-to-end latency at every retry (per-epoch
+    #   state under a control loop, the fixed-point oracle otherwise): a shed
+    #   client waits about one service round of the plan that is actually
+    #   serving, not a run-constant guess
     max_iters: int = 5        # engine fixed-point iterations
     tol: float = 1e-3         # arrival-time convergence tolerance (seconds)
 
@@ -63,6 +68,8 @@ class ClosedLoopClients:
             raise ValueError("need n_clients >= 1 and max_in_flight >= 1")
         if self.think_dist not in ("exp", "const"):
             raise ValueError(f"unknown think_dist {self.think_dist!r}")
+        if self.backoff is not None and self.backoff < 0.0:
+            raise ValueError("backoff must be >= 0 (or None for live latency)")
 
 
 def closed_loop_ingress(
@@ -122,7 +129,14 @@ def closed_loop_ingress(
             done = t + max(float(latency[frame]), 0.0)
             heapq.heappush(heap, (done + think(), seq, -1, 0))
         elif cfg.retry_on_shed and tries < cfg.max_retries:
-            delay = cfg.backoff * (2.0 ** tries) * float(rng.uniform(0.5, 1.5))
+            # backoff=None: wait about one modeled service round (the oracle
+            # latency is this path's "live plan state")
+            base = (
+                cfg.backoff
+                if cfg.backoff is not None
+                else max(float(latency[frame]), 1e-3)
+            )
+            delay = base * (2.0 ** tries) * float(rng.uniform(0.5, 1.5))
             heapq.heappush(heap, (t + delay, seq, frame, tries + 1))
         else:
             issue[frame] = t

@@ -20,7 +20,7 @@ Entry points:
 from .core import PipelineConfig, run_pipeline
 from .fanout import AccumulatorFanout, DrawnFanout, FanoutSpec, draw_counts, make_stage_fanouts
 from .result import PipelineResult
-from .stages import Instance, ModuleStage, StageStats, make_dispatcher
+from .stages import Instance, ModuleStage, StageStats, StageUpdate, make_dispatcher
 
 __all__ = [
     "AccumulatorFanout",
@@ -31,6 +31,7 @@ __all__ = [
     "PipelineConfig",
     "PipelineResult",
     "StageStats",
+    "StageUpdate",
     "draw_counts",
     "make_dispatcher",
     "make_stage_fanouts",

@@ -45,7 +45,7 @@ from ..frontend.admission import AdmissionController
 from ..frontend.clients import ClosedLoopClients
 from .fanout import FanoutSpec
 from .result import PipelineResult
-from .stages import Instance, ModuleStage, _K_ARRIVE, _K_FLUSH, _K_FREE
+from .stages import Instance, ModuleStage, _K_ARRIVE, _K_EPOCH, _K_FLUSH, _K_FREE
 
 
 @dataclass(frozen=True)
@@ -73,6 +73,8 @@ def run_pipeline(
     admission: "AdmissionController | None" = None,
     tail: str = "flush",
     seed: int = 0,
+    control=None,
+    e2e_hint: float = 0.05,
 ) -> PipelineResult:
     """Co-simulate ``n_frames`` frames through ``stages`` along ``dag``.
 
@@ -81,6 +83,16 @@ def run_pipeline(
     staggers the initial slot starts) must be given.  ``admission`` sheds at
     the issue instant against live state.  ``tail`` governs end-of-stream
     leftovers on timeout-less machines (``"flush"`` / ``"drop"``).
+
+    ``control`` (a `repro.serving.control.ControlRuntime`) runs the
+    incremental control plane *inside* the loop: it observes every issued
+    frame, fires at epoch boundaries (``_K_EPOCH`` events, after all
+    same-instant arrivals/frees/flushes), and hot-swaps the stage machine
+    sets via :meth:`ModuleStage.apply_update` without dropping in-flight
+    frames.  The epoch chain dies once the whole stream has been issued, so
+    end-of-stream quiescence (and golden equivalence with the control loop
+    disabled) is untouched.  ``e2e_hint`` is the fallback latency estimate
+    for clients whose retry ``backoff`` re-reads live plan state.
     """
     if tail not in ("flush", "drop"):
         raise ValueError(f"unknown tail policy {tail!r}")
@@ -112,6 +124,7 @@ def run_pipeline(
 
     attempts = 0
     next_frame = 0      # closed-loop global frame counter
+    issued = 0          # distinct frames offered so far (first attempts)
     # per-stage stream accounting, so phantom injection knows when a stage's
     # real stream is over: a stage is *done* once every frame is accounted
     # there (entered, voided upstream, or shed at ingress) and no instance
@@ -142,14 +155,26 @@ def run_pipeline(
             return clients.think_time
         return float(rng.exponential(clients.think_time))
 
-    def deliver_to(st: ModuleStage, inst: Instance, now: float) -> None:
-        """Deliver one instance and revive a dormant phantom chain."""
-        st.deliver(inst, now, push)
-        if st.phantom_paused:
+    def revive_phantoms(st: ModuleStage, now: float) -> None:
+        """Restart a dormant injection chain (paid-up through ``now``).
+
+        A chain goes dormant when the stage cannot take a phantom (full,
+        parked deliveries, or queued real batches); it must be revived by
+        whatever clears that condition — a delivery (the pre-existing hook)
+        or a machine freeing (drains the service backlog).  A stage whose
+        real stream has ended but whose tail batch still needs phantom fill
+        depends on the free-side revival: no further delivery will come.
+        """
+        if st.phantom_paused and st.phantom_target > 0.0:
             st.phantom_paused = False
             period = 1.0 / st.phantom_target
             st.anchor = now - st.delivered * period
-            push(now + period, _K_ARRIVE, None, ("phantom", st.name))
+            push(now + period, _K_ARRIVE, None, ("phantom", st.name, st.phantom_token))
+
+    def deliver_to(st: ModuleStage, inst: Instance, now: float) -> None:
+        """Deliver one instance and revive a dormant phantom chain."""
+        st.deliver(inst, now, push)
+        revive_phantoms(st, now)
 
     def finish_frame(f: int, t: float) -> None:
         if resolved[f]:
@@ -235,6 +260,7 @@ def run_pipeline(
             ust.cores[umid].free(now)
             if ust.start_next(umid, now, push):
                 drain_parked(ust, now)
+            revive_phantoms(ust, now)
 
     def handle_instance_drop(m, f, t, entries) -> None:
         pend[m][f] -= 1
@@ -249,9 +275,15 @@ def run_pipeline(
                 stage_resolved(m, f, float(finish[m][f]), True, entries, None)
 
     def issue_frame(f: int, t: float, tries: int) -> None:
-        nonlocal attempts
+        nonlocal attempts, issued
         if clients is not None:
             attempts += 1
+        if tries == 0:
+            issued += 1
+            if control is not None:
+                # the control plane estimates demand from *offered* frames:
+                # shed traffic is still demand the next plan should cover
+                control.observe(t)
         if admission is not None:
             # live ingress occupancy: instances waiting (formation + queued
             # + parked) at the source stages — the real quantity the PR-2
@@ -274,7 +306,16 @@ def run_pipeline(
             and clients.retry_on_shed
             and tries < clients.max_retries
         ):
-            delay = clients.backoff * (2.0 ** tries) * float(rng.uniform(0.5, 1.5))
+            # backoff=None re-reads the *live* plan's modeled e2e latency at
+            # every retry (per-epoch state under a control loop, not a
+            # run-constant): a client waits about one service round
+            if clients.backoff is not None:
+                base = clients.backoff
+            elif control is not None:
+                base = control.e2e_hint
+            else:
+                base = e2e_hint
+            delay = base * (2.0 ** tries) * float(rng.uniform(0.5, 1.5))
             push(t + delay, _K_ARRIVE, None, ("issue", f, tries + 1))
             return
         issue_t[f] = t
@@ -305,7 +346,14 @@ def run_pipeline(
         st = stages[m]
         if st.phantom_target > 0.0:
             st.anchor = t_first
-            push(t_first + 1.0 / st.phantom_target, _K_ARRIVE, None, ("phantom", m))
+            push(
+                t_first + 1.0 / st.phantom_target, _K_ARRIVE, None,
+                ("phantom", m, st.phantom_token),
+            )
+    epoch_armed = False
+    if control is not None:
+        push(t_first + control.interval, _K_EPOCH, None, None)
+        epoch_armed = True
 
     # -- main loop -----------------------------------------------------------
     t_now = 0.0
@@ -347,6 +395,16 @@ def run_pipeline(
                     break
             if not acted and not heap:
                 break
+            if (
+                acted
+                and control is not None
+                and not epoch_armed
+                and issued < n_frames
+            ):
+                # the wedge is resolved and the run continues: re-arm the
+                # epoch chain that lapsed to let this flush happen
+                push(t_now + control.interval, _K_EPOCH, None, None)
+                epoch_armed = True
             continue
         t, kind, _s, stage_name, payload = heapq.heappop(heap)
         t_now = max(t_now, t)
@@ -361,8 +419,10 @@ def run_pipeline(
                     next_frame += 1
                 issue_frame(f, t, tries)
             else:  # adaptive phantom injection at one stage
-                _, m = payload
+                _, m, token = payload
                 st = stages[m]
+                if token != st.phantom_token or st.phantom_target <= 0.0:
+                    continue  # a hot-swap re-anchored the streamer: stale chain
                 if stage_stream_done(m):
                     continue  # this stage's real stream is over: chain dies
                 period = 1.0 / st.phantom_target
@@ -384,8 +444,10 @@ def run_pipeline(
                     # causally), then resync the anchor so the stage is
                     # considered paid-up through now — old deficit is
                     # forgiven rather than burst-injected, and total
-                    # arrivals stay rate-limited at the target
-                    if st.has_space and not st.parked:
+                    # arrivals stay rate-limited at the target.  A stage
+                    # with queued real batches gets no phantoms: idle-slot
+                    # filling must not eat the capacity that drains backlog
+                    if st.has_space and not st.parked and not st.service_backlog:
                         st.stats.phantom += 1
                         st.deliver(Instance(-1, t), t, push)
                     else:
@@ -397,11 +459,11 @@ def run_pipeline(
                         st.phantom_paused = True
                         continue
                     st.anchor = t - st.delivered * period
-                    push(t + period, _K_ARRIVE, None, ("phantom", m))
+                    push(t + period, _K_ARRIVE, None, ("phantom", m, st.phantom_token))
                 else:
                     # real arrivals kept the collect rate at target: check
                     # again when the next slot comes due
-                    push(due, _K_ARRIVE, None, ("phantom", m))
+                    push(due, _K_ARRIVE, None, ("phantom", m, st.phantom_token))
         elif kind == _K_FREE:
             # collect every machine-free at this instant before delivering,
             # so cross-machine outputs land downstream in frame order
@@ -441,13 +503,37 @@ def run_pipeline(
                 # until the backpressured stage drains (see unblock)
             for m, mid in frees:
                 drain_parked(stages[m], t)
-        else:  # _K_FLUSH
+            for m in {m for m, _ in frees}:
+                # a free may have cleared the service backlog that paused
+                # the stage's phantom chain — the last real tail batch can
+                # only fill if the chain comes back without a new delivery
+                revive_phantoms(stages[m], t)
+        elif kind == _K_FLUSH:
             st = stages[stage_name]
             mid, token = payload
-            core = st.cores[mid]
-            if token == core.token and core.buf:
+            core = st.cores.get(mid)  # None: the core retired after a drain
+            if core is not None and token == core.token and core.buf:
                 st.close(mid, batch_ready=t, now=t, push=push)
                 drain_parked(st, t)
+        else:  # _K_EPOCH: control-plane boundary (after same-instant events)
+            epoch_armed = False
+            if issued >= n_frames:
+                continue  # stream fully issued: the epoch chain retires,
+                #           end-of-stream quiescence proceeds untouched
+            updates = control.on_epoch(t)
+            if updates:
+                for m, upd in updates.items():
+                    stages[m].apply_update(upd, t, push)
+                for m in updates:
+                    # swapped-in machines are idle: parked/backpressured
+                    # deliveries may proceed immediately
+                    drain_parked(stages[m], t)
+            if heap:
+                push(t + control.interval, _K_EPOCH, None, None)
+                epoch_armed = True
+            # an otherwise-empty heap means the run is wedged on a partial
+            # batch that only the quiescence flush (which requires an empty
+            # heap) can resolve: let the chain lapse; the flush re-arms it
 
     # anything still unresolved is wedged in-pipeline: account as dropped
     for f in range(n_frames):

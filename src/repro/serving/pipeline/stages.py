@@ -18,7 +18,7 @@ stage of the app DAG from one global heap.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Callable, Mapping, Sequence
 
 from ...core.dispatch import Machine, Policy
@@ -46,43 +46,72 @@ class TCDispatcher:
     ``(slot time, -ratio, index)``; consecutive arrivals fill the current
     run (one batch) before the walk advances — request-for-request identical
     to `core.dispatch.dispatch_runs(policy=TC)` on the same stream.
+
+    :meth:`update` swaps the machine set *without restarting the walk*
+    (control-plane hot swap): kept machines keep their virtual-time slot
+    positions and the open run keeps filling, so a partially-formed batch
+    is never stranded; added machines join at the walk's current frontier
+    (`dispatch.remaining_workloads` semantics — a new machine starts
+    collecting its slice of the stream immediately).
     """
 
     def __init__(self, machines: Sequence[Machine]):
         self.machines = list(machines)
-        self._next_t = [0.0] * len(self.machines)
-        self._cur = 0
+        self._next_t = {m.mid: 0.0 for m in machines}
+        self._cur: "int | None" = None  # mid of the machine with an open run
         self._left = 0
 
     def assign(self) -> int:
         if self._left == 0:
             i = min(
                 range(len(self.machines)),
-                key=lambda j: (self._next_t[j], -self.machines[j].config.ratio, j),
+                key=lambda j: (
+                    self._next_t[self.machines[j].mid],
+                    -self.machines[j].config.ratio,
+                    j,
+                ),
             )
-            self._cur = i
             m = self.machines[i]
+            self._cur = m.mid
             self._left = m.config.batch
-            self._next_t[i] += m.config.batch / m.rate
+            self._next_t[m.mid] += m.config.batch / m.rate
         self._left -= 1
-        return self.machines[self._cur].mid
+        return self._cur
+
+    def update(self, machines: Sequence[Machine]) -> None:
+        old = self._next_t
+        self.machines = list(machines)
+        frontier = min(
+            (old[m.mid] for m in machines if m.mid in old), default=0.0
+        )
+        self._next_t = {m.mid: old.get(m.mid, frontier) for m in machines}
+        if self._cur is not None and self._cur not in self._next_t:
+            self._left = 0  # the open run's machine drained: abandon the run
 
 
 class RRDispatcher:
     """Deficit-counter weighted round-robin of individual requests (RR/DT),
-    request-for-request identical to `dispatch_runs` under those policies."""
+    request-for-request identical to `dispatch_runs` under those policies.
+    :meth:`update` preserves kept machines' deficit credits across a swap."""
 
     def __init__(self, machines: Sequence[Machine]):
         self.machines = list(machines)
-        self._credit = [0.0] * len(self.machines)
+        self._credit = {m.mid: 0.0 for m in machines}
         self._tot = sum(m.rate for m in self.machines)
 
     def assign(self) -> int:
-        for i, m in enumerate(self.machines):
-            self._credit[i] += m.rate / self._tot
-        j = max(range(len(self.machines)), key=lambda i: self._credit[i])
-        self._credit[j] -= 1.0
-        return self.machines[j].mid
+        for m in self.machines:
+            self._credit[m.mid] += m.rate / self._tot
+        j = max(range(len(self.machines)), key=lambda i: self._credit[self.machines[i].mid])
+        mid = self.machines[j].mid
+        self._credit[mid] -= 1.0
+        return mid
+
+    def update(self, machines: Sequence[Machine]) -> None:
+        old = self._credit
+        self.machines = list(machines)
+        self._credit = {m.mid: old.get(m.mid, 0.0) for m in machines}
+        self._tot = sum(m.rate for m in self.machines)
 
 
 def make_dispatcher(machines: Sequence[Machine], policy: Policy):
@@ -99,6 +128,22 @@ class StageStats:
     batches: int = 0
     dropped: int = 0
     phantom: int = 0
+
+
+@dataclass
+class StageUpdate:
+    """One stage's share of a plan hot-swap (control-plane epoch).
+
+    ``machines`` is the *target* machine set of the new schedule (mids as
+    produced by ``expand_machines`` — the stage remaps them onto its own
+    stable core ids); ``timeout`` is keyed by those same mids.
+    ``phantom_target`` is the new provisioned collect rate for the adaptive
+    dummy streamer (0 = stop streaming).
+    """
+
+    machines: Sequence[Machine]
+    timeout: "float | None | Mapping[int, float]" = None
+    phantom_target: float = 0.0
 
 
 class ModuleStage:
@@ -128,6 +173,7 @@ class ModuleStage:
     ):
         if queue_cap is not None and queue_cap < 1:
             raise ValueError("queue_cap must be >= 1 (or None for unbounded)")
+        self._req_queue_cap = queue_cap  # as requested, pre-floor (re-floored on swap)
         if queue_cap is not None:
             # formation buffers count toward the backlog, so a cap below the
             # largest batch size could never form a full batch: floor it
@@ -139,6 +185,7 @@ class ModuleStage:
         self.name = name
         self.machines = list(machines)
         self.cores = {m.mid: MachineCore(m, t_of[m.mid]) for m in machines}
+        self._next_mid = max((m.mid for m in machines), default=-1) + 1
         self.dispatcher = make_dispatcher(machines, policy)
         self.fanout = fanout
         self.phantom_target = float(phantom_target)
@@ -151,6 +198,10 @@ class ModuleStage:
         # dormant chain schedules no events, so a wedged pipeline can reach
         # quiescence and flush; the next successful delivery revives it
         self.phantom_paused = False
+        # bumped when a hot-swap re-anchors the streamer: pending chain
+        # events carry the token they were pushed under and die if stale,
+        # so a swap can restart the chain without double-injecting
+        self.phantom_token = 0
         self.queue_cap = queue_cap
         self.backlog = 0  # instances delivered but not yet started service
         # deliveries parked by backpressure: (instance, blocker) where
@@ -164,6 +215,118 @@ class ModuleStage:
     @property
     def has_space(self) -> bool:
         return self.queue_cap is None or self.backlog < self.queue_cap
+
+    @property
+    def service_backlog(self) -> bool:
+        """True when closed batches are queued behind a busy machine.
+
+        The phantom injector checks this: a real frontend fills *otherwise
+        idle* batch slots, so while real work is already waiting for service
+        the stage must spend its capacity burning that backlog down, not
+        serving phantoms — otherwise provisioning slack (a control loop's
+        ``margin``) could never drain a transient queue.
+        """
+        return any(c.queue for c in self.cores.values())
+
+    # -- control-plane hot swap ----------------------------------------------
+    def apply_update(self, upd: StageUpdate, now: float, push: Callable) -> None:
+        """Apply one epoch's plan delta to the live stage.
+
+        Per configuration, existing cores are kept up to the new machine
+        count (work-holding cores first — a draining core of the right
+        configuration is revived rather than duplicated); surplus cores are
+        marked draining: their open batch closes *now* (flushes with its
+        real members; a phantom-only buffer is discarded), already-queued
+        batches run to completion, and no new members are dispatched to
+        them.  Added machines get fresh stage-local ids and join the
+        dispatch walk immediately.  The dispatcher is rebuilt over the new
+        active set (the TC walk restarts ratio-aligned), and the dummy
+        streamer re-anchors to the new provisioned collect rate.
+        """
+        if isinstance(upd.timeout, Mapping):
+            t_of = {m.mid: upd.timeout.get(m.mid) for m in upd.machines}
+        else:
+            t_of = {m.mid: upd.timeout for m in upd.machines}
+
+        by_cfg: dict = {}
+        for mid, core in self.cores.items():
+            by_cfg.setdefault(core.machine.config, []).append(core)
+        new_by_cfg: dict = {}
+        for m in upd.machines:
+            new_by_cfg.setdefault(m.config, []).append(m)
+
+        active: list[Machine] = []
+        claimed: set[int] = set()
+        for cfg, new_ms in new_by_cfg.items():
+            pool = by_cfg.get(cfg, [])
+            # keep work-holding cores first; revive draining cores before
+            # creating duplicates (their queued work rejoins the same rank)
+            pool = sorted(pool, key=lambda c: (c.draining, c.drained))
+            for nm in new_ms:
+                if pool:
+                    core = pool.pop(0)
+                    mid = core.machine.mid
+                else:
+                    mid = self._next_mid
+                    self._next_mid += 1
+                    core = MachineCore(_dc_replace(nm, mid=mid), None)
+                    self.cores[mid] = core
+                machine = _dc_replace(nm, mid=mid)
+                core.machine = machine
+                core.timeout = t_of.get(nm.mid)
+                core.draining = False
+                claimed.add(mid)
+                active.append(machine)
+        for mid, core in self.cores.items():
+            if mid in claimed or core.draining:
+                continue
+            core.draining = True
+            if core.buf:
+                # drained machines finish their open batch: it closes now
+                # (partial) and their queued work runs to completion; a
+                # phantom-only buffer is discarded — nothing real is lost
+                if any(i.real for i in core.buf):
+                    self.close(mid, batch_ready=now, now=now, push=push)
+                else:
+                    self.discard_leftover(mid)
+        # retire cores that finished draining: they hold no work and no
+        # live event references them (a busy core cannot be drained; stale
+        # flush events tolerate a missing mid), so keeping them would grow
+        # the stage without bound across epochs and slow every hot-path
+        # scan (service_backlog, quiescence) proportionally to run length
+        for mid in [
+            mid for mid, c in self.cores.items()
+            if mid not in claimed and c.draining and c.drained
+        ]:
+            del self.cores[mid]
+            self.in_service.pop(mid, None)
+
+        self.machines = active
+        # the walk continues across the swap: kept machines keep their slot
+        # positions (their open formation buffers keep filling — no batch is
+        # stranded), added machines join at the frontier
+        self.dispatcher.update(active)
+        if self._req_queue_cap is not None:
+            self.queue_cap = max(
+                self._req_queue_cap,
+                max((m.config.batch for m in active), default=1),
+            )
+
+        target = float(upd.phantom_target)
+        retarget = abs(target - self.phantom_target) > 1e-12
+        self.phantom_target = target
+        if retarget:
+            # re-anchor the dummy streamer to the new provisioned rate:
+            # paid-up through now, old chain events die on the stale token
+            self.phantom_token += 1
+            self.phantom_paused = False
+            if target > 0.0:
+                period = 1.0 / target
+                self.anchor = now - self.delivered * period
+                push(
+                    now + period, _K_ARRIVE, None,
+                    ("phantom", self.name, self.phantom_token),
+                )
 
     # -- formation / service -------------------------------------------------
     def deliver(self, inst: Instance, now: float, push: Callable) -> None:
@@ -212,7 +375,9 @@ class ModuleStage:
 # event kinds of the pipeline's global heap (core.py re-exports): arrivals
 # first (a request landing exactly at a deadline joins the batch), then
 # machine-frees (upstream completions must deliver before a downstream flush
-# at the same instant fires), then flushes.  FREE-before-FLUSH within one
-# stage is outcome-equivalent to the single-module core's FLUSH-before-FREE
-# (both orders start the same FIFO batch at the same time).
-_K_ARRIVE, _K_FREE, _K_FLUSH = 0, 1, 2
+# at the same instant fires), then flushes, then control-plane epochs (a
+# swap observes everything that happened up to and including its instant).
+# FREE-before-FLUSH within one stage is outcome-equivalent to the
+# single-module core's FLUSH-before-FREE (both orders start the same FIFO
+# batch at the same time).
+_K_ARRIVE, _K_FREE, _K_FLUSH, _K_EPOCH = 0, 1, 2, 3
