@@ -349,7 +349,11 @@ def bench_diurnal_sweep(n: int) -> None:
     For each 5-app suite seed, one full diurnal period (sinusoidal intensity
     ``1 + 0.8 sin``, peak = 1.8x mean) is served two ways, both planned
     against a derated internal SLO (``slo / 1.25`` — transient-absorbing
-    slack, attainment measured at the real SLO) with dummy streaming on:
+    slack, attainment measured at the real SLO) with dummy streaming on and
+    ``timeout="budget"`` deadline flushing re-enabled behind the
+    burst-aware deadline flag (``FrontendConfig(burst_deadline=True)``
+    closes the PR-4 partial-flush collapse downstream of batched stages;
+    without it this sweep had to run deadline-less):
 
     * **static**: one plan provisioned for the diurnal *peak* rate;
     * **replan**: initial plan at the mean rate + the epoch-based control
@@ -384,7 +388,7 @@ def bench_diurnal_sweep(n: int) -> None:
     for name, rate, slo in seeds:
         period = n_frames / rate
         arr = trace_arrivals(n_frames, rate, seed=0, period=period)
-        fe = FrontendConfig(dummies=True)
+        fe = FrontendConfig(dummies=True, burst_deadline=True)
         slo_plan = slo / derate
         wl = make_workload(app_by_name(name), rate, slo_plan)
         plan = Planner(B.HARPAGON).plan(wl, PROFILES)
@@ -394,7 +398,8 @@ def bench_diurnal_sweep(n: int) -> None:
             emit(f"diurnal_sweep_{name}", 0.0, "infeasible", app=name, feasible=False)
             continue
         res_pk = ServingEngine(plan_pk).run(
-            n_frames, rate * peak, arrivals=arr, frontend=fe, pipeline=True
+            n_frames, rate * peak, arrivals=arr, frontend=fe, pipeline=True,
+            timeout="budget",
         )
         att = lambda r: float(
             (np.asarray(r.e2e_latencies) <= slo + 1e-9).sum() / max(1, r.offered)
@@ -407,7 +412,7 @@ def bench_diurnal_sweep(n: int) -> None:
             )
             res = ServingEngine(plan).run(
                 n_frames, rate, arrivals=arr, frontend=fe, pipeline=True,
-                control=ctrl,
+                control=ctrl, timeout="budget",
             )
             cost_rp = serving_cost(res.epochs, float(arr[-1]))
             ratio = plan_pk.cost / cost_rp
@@ -483,6 +488,97 @@ def bench_diurnal_sweep(n: int) -> None:
         cost_ratio_mean=round(finite_mean(cost_ratios), 4),
         cost_ratio_worst=round(max(cost_ratios), 4),
         steps=len(cost_ratios),
+    )
+
+
+def bench_pipeline_speed(n: int) -> None:
+    """Macro-event pipeline core vs the event-by-event reference loop
+    (ISSUE-5 acceptance): a multi-module app at >= 10^5 frames must replay
+    >= 5x faster on the default path (segment fast-path to the vectorized
+    flat kernel) with BIT-identical per-frame results.  Under ``--smoke``
+    the stream shrinks to 2*10^4 frames and a speedup below 3x, a fast-path
+    frame rate below 10^5 frames/s, or any result disagreement FAILS the
+    run — the pipeline hot-path regression gate."""
+    import numpy as np
+
+    from repro.serving.pipeline import PipelineConfig
+    from repro.workloads.apps import app_by_name, make_workload
+
+    rate, slo = 150.0, 2.5
+    wl = make_workload(app_by_name("face"), rate, slo)
+    plan = Planner(B.HARPAGON).plan(wl, PROFILES)
+    assert plan.feasible
+    eng = ServingEngine(plan)
+    n_frames = 20_000 if SMOKE else 100_000
+    ref, us_ref = common.timed(
+        lambda: eng.run(
+            n_frames, rate, arrivals="poisson",
+            pipeline=PipelineConfig(reference=True),
+        ),
+        repeat=1 if SMOKE else 2,
+    )
+    fast, us_fast = common.timed(
+        lambda: eng.run(n_frames, rate, arrivals="poisson", pipeline=True),
+        repeat=3,
+    )
+    t_ref, t_fast = us_ref / 1e6, us_fast / 1e6
+    agree = bool(
+        np.array_equal(ref.pipeline.e2e, fast.pipeline.e2e, equal_nan=True)
+        and all(
+            np.array_equal(
+                ref.pipeline.finish[m], fast.pipeline.finish[m], equal_nan=True
+            )
+            for m in ref.pipeline.modules
+        )
+    )
+    speedup = t_ref / t_fast
+    # the reference loop's event throughput: how much per-event Python the
+    # fast path is buying down (>= 2 instances + free/flush per frame)
+    ref_fps = n_frames / t_ref
+    fast_fps = n_frames / t_fast
+    emit(
+        "pipeline_speed",
+        t_fast * 1e6,
+        f"reference={t_ref:.2f}s|fast={t_fast:.3f}s|speedup={speedup:.1f}x"
+        f"|frames/s={fast_fps:,.0f}|n={n_frames:g}|agree={agree}"
+        f"|target>={'3x(smoke)' if SMOKE else '5x'}",
+        reference_s=round(t_ref, 4),
+        fast_s=round(t_fast, 4),
+        speedup=round(speedup, 2),
+        n_frames=n_frames,
+        ref_frames_per_s=round(ref_fps, 1),
+        fast_frames_per_s=round(fast_fps, 1),
+        agree=agree,
+    )
+    if SMOKE and (not agree or speedup < 3.0 or fast_fps < 100_000):
+        print(
+            f"# SMOKE FAILURE: pipeline speedup {speedup:.1f}x < 3x, "
+            f"fast path {fast_fps:,.0f} frames/s < 100,000, or result "
+            f"disagreement (agree={agree})",
+            file=sys.stderr,
+        )
+        raise SystemExit(1)
+
+
+def bench_planner_speed(n: int) -> None:
+    """Planner.plan wall-clock over the workload suite — the paper's
+    "millisecond-level planning runtime" claim, tracked as a trajectory row
+    (the `dispatch.wcl_memo` per-call memo collapses the cascade tiers'
+    repeated (config, rate, burst) WCL evaluations to dict hits)."""
+    wls = workload_suite(max(60, min(n, 200)))
+    h = Planner(B.HARPAGON)
+    t0 = time.perf_counter()
+    plans = [h.plan(wl, PROFILES) for wl in wls]
+    t = time.perf_counter() - t0
+    feas = sum(1 for p in plans if p.feasible)
+    ms = 1e3 * t / len(wls)
+    emit(
+        "planner_speed",
+        t * 1e6 / len(wls),
+        f"plan={ms:.2f}ms|feasible={feas}/{len(wls)}|paper=5ms",
+        ms_per_plan=round(ms, 3),
+        workloads=len(wls),
+        feasible=feas,
     )
 
 
@@ -563,6 +659,8 @@ BENCHES = {
     "shed_sweep": bench_shed_sweep,
     "pipeline_sweep": bench_pipeline_sweep,
     "diurnal_sweep": bench_diurnal_sweep,
+    "pipeline_speed": bench_pipeline_speed,
+    "planner_speed": bench_planner_speed,
     "replay": bench_replay_speed,
     "runtime": bench_runtime,
 }
@@ -570,6 +668,7 @@ BENCHES = {
 # serving-subsystem rows tracked across PRs by `--json` (BENCH_serving.json)
 _SERVING_PREFIXES = (
     "replay_", "slo_sweep_", "shed_sweep_", "pipeline_sweep_", "diurnal_",
+    "pipeline_speed", "planner_speed",
 )
 
 # --smoke: CI-sized inputs + hard regression gates (see bench_replay_speed)
@@ -593,9 +692,20 @@ def main() -> None:
         const="BENCH_serving.json",
         default=None,
         metavar="PATH",
-        help="write serving-bench rows (replay speedup, SLO sweep, shed-rate "
-        "sweep, diurnal control-plane sweep) as machine-readable JSON "
-        "(default path: BENCH_serving.json)",
+        help="write serving-bench rows (replay/pipeline speedups, SLO sweep, "
+        "shed-rate sweep, diurnal control-plane sweep, planner speed) as "
+        "machine-readable JSON (default path: BENCH_serving.json)",
+    )
+    ap.add_argument(
+        "--profile",
+        type=int,
+        nargs="?",
+        const=25,
+        default=0,
+        metavar="N",
+        help="run each selected bench under cProfile and print its top-N "
+        "functions by cumulative time (default N=25) — e.g. "
+        "`--only pipeline_speed --profile` profiles the pipeline loop",
     )
     args = ap.parse_args()
     SMOKE = args.smoke
@@ -603,7 +713,21 @@ def main() -> None:
     for name, fn in BENCHES.items():
         if args.only and name not in args.only.split(","):
             continue
-        fn(args.n)
+        if args.profile:
+            import cProfile
+            import pstats
+
+            prof = cProfile.Profile()
+            prof.enable()
+            try:
+                fn(args.n)
+            finally:
+                prof.disable()
+                print(f"# --- cProfile top {args.profile}: {name} ---", file=sys.stderr)
+                stats = pstats.Stats(prof, stream=sys.stderr)
+                stats.strip_dirs().sort_stats("cumulative").print_stats(args.profile)
+        else:
+            fn(args.n)
     if args.json:
         rows = [
             r for r in common.RECORDS if r["name"].startswith(_SERVING_PREFIXES)

@@ -202,6 +202,22 @@ class AppDAG:
     def topo_order(self) -> list[str]:
         return topo_sort(self.modules, self.edges)
 
+    def ancestor_closure(self) -> dict[str, set[str]]:
+        """Per-module transitive ancestor sets, built in one topo pass.
+
+        Shared by the pipelined core's quiescence gating and the segment
+        fast-path's causal-boundary check — both must agree on what counts
+        as "upstream" or their tail-flush orderings desynchronize.
+        """
+        out: dict[str, set[str]] = {}
+        for m in self.topo_order():
+            anc: set[str] = set()
+            for p in self.parents(m):
+                anc.add(p)
+                anc |= out[p]
+            out[m] = anc
+        return out
+
     def latency(self, weights: Mapping[str, float]) -> float:
         return sp_latency(self.sp, weights)
 

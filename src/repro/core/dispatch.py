@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import enum
 import math
+from contextlib import contextmanager
 from dataclasses import dataclass
 
 import numpy as np
@@ -29,6 +30,33 @@ import numpy as np
 from .profiles import Config
 
 _EPS = 1e-9
+
+# per-planning-call memo for `config_wcl` (None = memoization off).  The
+# planner's splitter cascade re-evaluates the same (config, policy, rate,
+# full, burst) tuples many times — every cascade tier re-runs Algorithm 1,
+# the dummy generator re-runs it once per allocation, and the reassigner
+# loops over modules — so `Planner.plan`/`replan` wrap their bodies in
+# `wcl_memo()` and the pure function amortizes to a dict hit.  Scoped to
+# the call (not a global LRU) so the cache can never outlive the inputs
+# that shaped it and costs nothing outside planning.
+_WCL_MEMO: "dict | None" = None
+
+
+@contextmanager
+def wcl_memo():
+    """Enable `config_wcl` memoization for the enclosed planning call.
+
+    Re-entrant: a nested scope (e.g. ``replan`` falling back to ``plan``)
+    keeps sharing the outermost cache.
+    """
+    global _WCL_MEMO
+    outer = _WCL_MEMO
+    if outer is None:
+        _WCL_MEMO = {}
+    try:
+        yield
+    finally:
+        _WCL_MEMO = outer
 
 
 class Policy(enum.Enum):
@@ -130,14 +158,24 @@ def config_wcl(
     RR/DT ``2d`` short-circuit below skips it, so that caller adds it
     explicitly.
     """
+    memo = _WCL_MEMO
+    if memo is not None:
+        key = (config, policy, collect_rate, full, burst)
+        hit = memo.get(key)
+        if hit is not None:
+            return hit
     d, b = config.duration, config.batch
     if policy is Policy.DT_OPT:
-        return d + b / config.throughput  # == 2d, optimistic on partials
-    if policy in (Policy.RR, Policy.DT) and full:
-        return 2.0 * d  # RR: local collection at own throughput; DT: d + b/t
-    if collect_rate <= _EPS:
-        return math.inf
-    return d + b / collect_rate + burst
+        out = d + b / config.throughput  # == 2d, optimistic on partials
+    elif policy in (Policy.RR, Policy.DT) and full:
+        out = 2.0 * d  # RR: local collection at own throughput; DT: d + b/t
+    elif collect_rate <= _EPS:
+        out = math.inf
+    else:
+        out = d + b / collect_rate + burst
+    if memo is not None:
+        memo[key] = out
+    return out
 
 
 def module_wcl(allocs: list[Alloc], policy: Policy) -> float:

@@ -145,7 +145,7 @@ class ControlRuntime:
         profiles: Mapping[str, ModuleProfile],
         frame_rate: float,
         *,
-        timeout_of: Callable[[object, "list[Machine]"], "float | None | dict"],
+        timeout_of: Callable[[object, "list[Machine]", Plan], "float | None | dict"],
         dummies: bool = False,
         admission: "AdmissionController | None" = None,
     ):
@@ -248,7 +248,7 @@ class ControlRuntime:
             machines = expand_machines(list(s.allocs))
             updates[m] = StageUpdate(
                 machines=machines,
-                timeout=self.timeout_of(s, machines),
+                timeout=self.timeout_of(s, machines, new_plan),
                 phantom_target=(
                     sum(a.rate + a.dummy for a in s.allocs) if self.dummies else 0.0
                 ),

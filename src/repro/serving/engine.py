@@ -109,6 +109,36 @@ class ServeResult:
         return float(np.quantile(np.asarray(self.e2e_latencies), 0.99))
 
 
+def plan_burst(plan: Plan, m: str) -> float:
+    """One upstream batch-arrival quantum for module ``m`` under ``plan``.
+
+    Arrivals at a module downstream of a batched stage come quantized in
+    its parents' batch completions: up to ``max(b_up) / rate_up`` seconds
+    of arrivals land at once, and the *gap* between completions is as long.
+    The same quantity `Planner._burst_of` uses on the WCL side
+    (``PlannerOptions(burst_aware=True)``), exposed here for the deadline
+    side (`resolve_module_timeout(..., burst=...)`).  Zero for sources.
+    """
+    wl = plan.workload
+    burst = 0.0
+    for p in wl.app.parents(m):
+        s = plan.schedules.get(p)
+        if s is None or not s.allocs:
+            continue
+        b_up = max(a.config.batch for a in s.allocs)
+        burst = max(burst, b_up / max(s.rate, 1e-12))
+    return burst
+
+
+# padded-fill floor factor for burst-aware budget deadlines: the adaptive
+# phantom injector's pacing law delivers ~C/1.5 in a deep lull (one 1.5-slot
+# grace per injection, deficit forgiven at each anchor resync), and its
+# backlog-yield suppresses it further while queued batches drain — 2x the
+# nominal fill time covers both, validated against the diurnal sweep's lull
+# phase (see `benchmarks.run --only diurnal_sweep`)
+_PAD_FILL = 2.0
+
+
 def resolve_module_timeout(
     schedule,
     machines: "list[Machine]",
@@ -116,6 +146,7 @@ def resolve_module_timeout(
     policy: Policy,
     *,
     dummies: bool = False,
+    burst: "float | None" = None,
 ) -> "float | None | dict[int, float]":
     """Resolve the batch-collection deadline for one module schedule.
 
@@ -124,6 +155,34 @@ def resolve_module_timeout(
     fits the module's latency budget.  A module-level function so the
     control plane (`repro.serving.control`) can resolve deadlines for
     hot-swapped schedules exactly like the engine resolves the initial ones.
+
+    ``burst`` (pass ``burst=None`` for the flag-off path) is the burst-aware
+    *deadline* correction — the PR-4 finding's fix, mirroring the
+    burst-aware WCL quantum (`repro.core.dispatch.config_wcl`) on the
+    deadline side, opt-in via ``FrontendConfig(burst_deadline=True)``.  Two
+    corrections compose on the dummy-streaming path:
+
+    * **one upstream batch-arrival quantum** (`plan_burst`, seconds):
+      downstream of a batched stage the inter-completion gap can straddle a
+      zero-slack ``budget - d`` deadline, flushing a partial batch whose
+      wasted service snowballs at 100% utilization (attainment below 0.5 at
+      1.0x provisioning on uniform arrivals).  Adding the quantum lets the
+      batch survive the gap and fill from the next completion;
+    * **the padded-fill floor**: the adaptive injector is rate-limited with
+      a 1.5-slot pacing law (anchor resync forgives old deficit), so its
+      achievable collection in a lull is ~``2/3`` of the provisioned rate
+      ``C``, and it yields entirely while real service backlog exists — a
+      deadline at the nominal ``b / C`` fill time then flushes a
+      nearly-empty batch on *every* cycle once traffic runs below
+      provisioning (the diurnal-lull collapse).  The floor
+      ``_PAD_FILL * (b + 1.5) / C`` is the fill time under that pacing law
+      plus arming lag, so a flush only ever fires on a batch the injector
+      could not have filled.
+
+    Both trade modeled-WCL tightness (a deadline may exceed ``budget - d``
+    by the quantum + floor slack) for flush stability — the same contract
+    as ``PlannerOptions(burst_aware=True)`` on the WCL side.  Flag off
+    (``burst=None``) keeps the exact PR-4 semantics, collapse included.
     """
     if timeout is None or isinstance(timeout, (int, float)):
         return timeout
@@ -132,9 +191,18 @@ def resolve_module_timeout(
         if dummies:
             # the frontend streams the plan's dummy traffic, so batches
             # collect at the provisioned rate and the deadline can sit
-            # exactly at the modeled budget
+            # exactly at the modeled budget (+ the opt-in burst corrections)
+            if burst is None:
+                return {
+                    mm.mid: max(s.budget - mm.config.duration, 0.0)
+                    for mm in machines
+                }
+            coll = sum(a.rate + a.dummy for a in s.allocs)
             return {
-                mm.mid: max(s.budget - mm.config.duration, 0.0)
+                mm.mid: max(
+                    s.budget - mm.config.duration,
+                    _PAD_FILL * (mm.config.batch + 1.5) / max(coll, 1e-12),
+                ) + burst
                 for mm in machines
             }
         # floor at the real-rate fill time: dummy-padded plans assume the
@@ -349,7 +417,10 @@ class ServingEngine:
         for m in topo:
             s = self.plan.schedules[m]
             machines = expand_machines(list(s.allocs))
-            w = self._module_timeout(m, machines, timeout, dummies=fe.dummies)
+            w = self._module_timeout(
+                m, machines, timeout,
+                dummies=fe.dummies, burst_deadline=fe.burst_deadline,
+            )
             # adaptive dummy streaming: pad the stage's collection up to the
             # provisioned collect rate (real + priced dummy), mirroring the
             # flat frontend's deficit injector — phantoms flow exactly when
@@ -380,8 +451,13 @@ class ServingEngine:
                 self.plan,
                 control.profiles,
                 frame_rate,
-                timeout_of=lambda s_, machines_: resolve_module_timeout(
-                    s_, machines_, timeout, self.policy, dummies=fe.dummies
+                timeout_of=lambda s_, machines_, plan_: resolve_module_timeout(
+                    s_, machines_, timeout, self.policy, dummies=fe.dummies,
+                    burst=(
+                        plan_burst(plan_, s_.module)
+                        if (fe.burst_deadline and fe.dummies)
+                        else None
+                    ),
                 ),
                 dummies=fe.dummies,
                 admission=ctrl,
@@ -390,18 +466,24 @@ class ServingEngine:
         pace = offered_rate if offered_rate is not None else frame_rate
         if ctrl is not None:
             ctrl.reset()
+        perf = dict(
+            reference=cfg.reference,
+            fast_path=cfg.fast_path,
+            event_queue=cfg.event_queue,
+            quantum=cfg.quantum,
+        )
         if fe.clients is not None:
             res = run_pipeline(
                 wl.app, stages, n_frames,
                 clients=fe.clients, pace=pace, admission=ctrl,
-                tail=tail, seed=seed, control=rt, e2e_hint=e2e_hint,
+                tail=tail, seed=seed, control=rt, e2e_hint=e2e_hint, **perf,
             )
         else:
             issue = make_arrivals(arrivals, n_frames, pace, seed=seed)
             res = run_pipeline(
                 wl.app, stages, n_frames,
                 issue=issue, admission=ctrl, tail=tail, seed=seed,
-                control=rt, e2e_hint=e2e_hint,
+                control=rt, e2e_hint=e2e_hint, **perf,
             )
         stats = {}
         for m in topo:
@@ -459,6 +541,7 @@ class ServingEngine:
             self._run_module(
                 m, ready, drop, fanout, finish_at[m], stats[m], lost,
                 timeout=timeout, tail=tail, dummies=fe.dummies,
+                burst_deadline=fe.burst_deadline,
             )
         sinks = [m for m in wl.app.modules if not wl.app.children(m)]
         sf = np.stack([finish_at[s] for s in sinks])
@@ -479,9 +562,12 @@ class ServingEngine:
         timeout: "float | str | None",
         *,
         dummies: bool = False,
+        burst_deadline: bool = False,
     ) -> "float | None | dict[int, float]":
+        burst = plan_burst(self.plan, m) if (burst_deadline and dummies) else None
         return resolve_module_timeout(
-            self.plan.schedules[m], machines, timeout, self.policy, dummies=dummies
+            self.plan.schedules[m], machines, timeout, self.policy,
+            dummies=dummies, burst=burst,
         )
 
     def _run_module(
@@ -497,6 +583,7 @@ class ServingEngine:
         timeout: "float | str | None",
         tail: str,
         dummies: bool = False,
+        burst_deadline: bool = False,
     ) -> None:
         sched = self.plan.schedules[m]
         machines = expand_machines(list(sched.allocs))
@@ -520,7 +607,9 @@ class ServingEngine:
                 ready_all, phantom = merge_phantoms(ready_inst, ph)
         n_all = ready_all.size
         runs = dispatch_runs(machines, n_all, self.policy)
-        w = self._module_timeout(m, machines, timeout, dummies=dummies)
+        w = self._module_timeout(
+            m, machines, timeout, dummies=dummies, burst_deadline=burst_deadline
+        )
         ex = self.executors.get(m)
         if ex is None:
             rep = replay_module(

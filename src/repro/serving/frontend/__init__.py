@@ -59,11 +59,20 @@ class FrontendConfig:
 
     The default instance is the identity frontend: no dummy streaming, admit
     everything, open-loop arrivals — bit-identical to running without one.
+
+    ``burst_deadline`` (opt-in, meaningful with ``dummies=True`` and
+    ``timeout="budget"``) extends each machine's flush deadline by one
+    upstream batch-arrival quantum (`repro.serving.engine.plan_burst`) —
+    the deadline-side mirror of the burst-aware WCL correction, closing the
+    PR-4 finding where zero-slack deadlines downstream of batched stages
+    flush partial batches on every straddled inter-completion gap and
+    attainment collapses below 0.5 at 1.0x provisioning.
     """
 
     dummies: bool = False
     admission: "AdmissionPolicy | Mapping[str, AdmissionPolicy]" = None
     clients: ClosedLoopClients | None = None
+    burst_deadline: bool = False
 
 
 __all__ = [

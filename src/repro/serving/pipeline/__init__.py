@@ -18,22 +18,37 @@ Entry points:
   :class:`ModuleStage` objects, for tests and custom topologies.
 """
 from .core import PipelineConfig, run_pipeline
+from .equeue import CalendarQueue, HeapQueue, make_queue
 from .fanout import AccumulatorFanout, DrawnFanout, FanoutSpec, draw_counts, make_stage_fanouts
-from .result import PipelineResult
-from .stages import Instance, ModuleStage, StageStats, StageUpdate, make_dispatcher
+from .result import FrameTable, PipelineResult
+from .stages import (
+    Instance,
+    ModuleStage,
+    RRDispatcher,
+    StageStats,
+    StageUpdate,
+    TCDispatcher,
+    make_dispatcher,
+)
 
 __all__ = [
     "AccumulatorFanout",
+    "CalendarQueue",
     "DrawnFanout",
     "FanoutSpec",
+    "FrameTable",
+    "HeapQueue",
     "Instance",
     "ModuleStage",
     "PipelineConfig",
     "PipelineResult",
+    "RRDispatcher",
     "StageStats",
     "StageUpdate",
+    "TCDispatcher",
     "draw_counts",
     "make_dispatcher",
+    "make_queue",
     "make_stage_fanouts",
     "run_pipeline",
 ]

@@ -30,10 +30,29 @@ outputs are delivered, sorted by ``(stage topo index, frame id)`` — the same
 order the flat engine's stable ready-sort produces, which is what makes the
 co-simulation cross-validate bit-for-bit against the vectorized kernel on
 unbounded queues with deterministic fanout.
+
+**Macro-event hot path.**  The event-by-event loop is the semantics oracle,
+not the speed target.  Three layers sit on top of it:
+
+* per-frame state lives in preallocated struct-of-arrays columns
+  (`result.FrameTable`) indexed by frame id — no per-frame dicts;
+* same-instant work is drained in macro-events: all machine-frees at one
+  timestamp deliver together (pre-existing), and a frame's whole fanout
+  enters a stage through one `ModuleStage.deliver_run` walk advance instead
+  of per-instance dispatcher calls;
+* when the run is **quiescent of everything only the event loop can
+  express** — open-loop issue, unbounded queues, deterministic fanout, no
+  phantom streaming, no admission, no control epochs — the entire segment
+  (here: the whole run) is delegated to the vectorized flat kernel
+  (`.fastpath`), a cache of the PR-3 equivalence theorem.  The event loop
+  would be re-entered at the segment boundary; with run-constant
+  eligibility there is exactly one segment.
+
+``PipelineConfig(reference=True)`` pins the original event-by-event loop
+(global heapq, scalar delivery, no fast path) as the bit-exactness oracle.
 """
 from __future__ import annotations
 
-import heapq
 import math
 from dataclasses import dataclass
 from typing import Mapping
@@ -43,8 +62,9 @@ import numpy as np
 from ...core.dag import AppDAG
 from ..frontend.admission import AdmissionController
 from ..frontend.clients import ClosedLoopClients
+from .equeue import make_queue
 from .fanout import FanoutSpec
-from .result import PipelineResult
+from .result import FrameTable, PipelineResult
 from .stages import Instance, ModuleStage, _K_ARRIVE, _K_EPOCH, _K_FLUSH, _K_FREE
 
 
@@ -56,10 +76,33 @@ class PipelineConfig:
     start service); ``None`` disables backpressure and reproduces the flat
     engine's unbounded-queue numbers.  ``fanout`` selects deterministic or
     correlated-stochastic per-frame fanout.
+
+    Performance knobs (results are invariant to all of them):
+
+    * ``reference`` — run the original event-by-event loop (global heapq,
+      scalar per-instance delivery, no segment fast-path): the bit-exactness
+      oracle the macro-event path is property-tested against.
+    * ``fast_path`` — allow delegating a control-quiescent run to the
+      vectorized flat kernel (`repro.serving.pipeline.fastpath`); setting it
+      ``False`` keeps the macro-event general loop even when eligible
+      (useful for benchmarking the loop itself).
+    * ``event_queue`` — ``"heap"`` (single global heap, default) or
+      ``"calendar"`` (bucketed calendar queue); both serve the identical
+      ``(t, kind, seq)`` order.  ``quantum`` overrides the calendar bucket
+      width (default: mean issue spacing).  The calendar's O(1)-amortized
+      promise does not survive CPython at this event population: the
+      C-implemented global heap measures ~10-40% faster than pure-Python
+      bucket bookkeeping across quantum settings (see the README speedup
+      table), so the heap stays the default and the calendar remains the
+      selectable, equivalence-pinned alternative.
     """
 
     fanout: FanoutSpec = FanoutSpec()
     queue_cap: "int | None" = None
+    reference: bool = False
+    fast_path: bool = True
+    event_queue: str = "heap"
+    quantum: "float | None" = None
 
 
 def run_pipeline(
@@ -75,6 +118,10 @@ def run_pipeline(
     seed: int = 0,
     control=None,
     e2e_hint: float = 0.05,
+    reference: bool = False,
+    fast_path: bool = True,
+    event_queue: str = "heap",
+    quantum: "float | None" = None,
 ) -> PipelineResult:
     """Co-simulate ``n_frames`` frames through ``stages`` along ``dag``.
 
@@ -98,6 +145,28 @@ def run_pipeline(
         raise ValueError(f"unknown tail policy {tail!r}")
     if (issue is None) == (clients is None):
         raise ValueError("need exactly one of issue= (open loop) or clients=")
+    if issue is not None:
+        issue = np.asarray(issue, dtype=np.float64)
+        if issue.shape != (n_frames,):
+            raise ValueError("issue times must have one entry per frame")
+    if (
+        not reference
+        and fast_path
+        and issue is not None
+        and admission is None
+        and control is None
+    ):
+        from . import fastpath
+
+        if fastpath.eligible(dag, stages):
+            # the whole run is one quiescent segment: delegate to the
+            # vectorized flat kernel (the PR-3 equivalence theorem, cached).
+            # None = a backdated end-of-stream tail flush would interleave
+            # a join's arrival stream (rare; see fastpath docstring): fall
+            # through to the causal event loop, which is authoritative
+            res = fastpath.run_flat_segment(dag, stages, n_frames, issue, tail)
+            if res is not None:
+                return res
     rng = np.random.default_rng(seed)
     topo = dag.topo_order()
     torder = {m: i for i, m in enumerate(topo)}
@@ -105,22 +174,32 @@ def run_pipeline(
     children = {m: sorted(dag.children(m), key=torder.__getitem__) for m in topo}
     sources = [m for m in topo if not parents[m]]
     sink_set = {m for m in topo if not children[m]}
+    ancestors = dag.ancestor_closure()
 
-    # -- per-frame state -----------------------------------------------------
-    issue_t = np.full(n_frames, np.nan)
-    shed = np.zeros(n_frames, dtype=bool)
-    lost = np.zeros(n_frames, dtype=bool)      # materialized instances, none done
-    resolved = np.zeros(n_frames, dtype=bool)
-    sink_bad = np.zeros(n_frames, dtype=bool)  # some sink never completed
-    sink_max = np.zeros(n_frames)
-    sinks_left = np.full(n_frames, len(sink_set), dtype=np.int64)
-    e2e = np.full(n_frames, np.nan)
-    avail = {m: np.full(n_frames, np.nan) for m in topo}
-    finish = {m: np.full(n_frames, np.nan) for m in topo}
-    pend = {m: np.zeros(n_frames, dtype=np.int64) for m in topo}
-    parents_left = {m: np.full(n_frames, len(parents[m]), dtype=np.int64) for m in topo}
-    child_void = {m: np.zeros(n_frames, dtype=bool) for m in topo}  # a parent skipped
-    child_avail = {m: np.zeros(n_frames) for m in topo}
+    def holds_real_work(st: ModuleStage) -> bool:
+        """True while the stage can still emit completions downstream:
+        parked deliveries, busy/queued cores (backpressure-blocked machines
+        stay busy with no pending free event), or real formation members.
+        Phantom-only buffers are excluded — they discard, never deliver."""
+        if st.parked:
+            return True
+        for core in st.cores.values():
+            if core.busy or core.queue:
+                return True
+            if core.buf and any(i.real for i in core.buf):
+                return True
+        return False
+
+    # -- per-frame state: preallocated SoA columns indexed by frame id ------
+    ft = FrameTable(n_frames, topo, parents, len(sink_set))
+    issue_t, shed, lost, resolved = ft.issue, ft.shed, ft.lost, ft.resolved
+    sink_bad, sink_max, sinks_left, e2e = (
+        ft.sink_bad, ft.sink_max, ft.sinks_left, ft.e2e,
+    )
+    avail, finish, pend = ft.avail, ft.finish, ft.pend
+    parents_left, child_void, child_avail = (
+        ft.parents_left, ft.child_void, ft.child_avail,
+    )
 
     attempts = 0
     next_frame = 0      # closed-loop global frame counter
@@ -137,12 +216,22 @@ def run_pipeline(
     def stage_stream_done(m: str) -> bool:
         return acc_count[m] >= n_frames and pend_total[m] == 0
 
-    heap: list = []
+    if quantum is None and event_queue == "calendar" and not reference:
+        # default calendar bucket = mean issue spacing (events cluster at
+        # the arrival timescale); correctness is quantum-invariant.  The
+        # heap queue never reads it, so skip the O(n) scan there.
+        if issue is not None and n_frames > 1:
+            span = float(np.max(issue)) - float(np.min(issue))
+            quantum = max(span / n_frames, 1e-9)
+        else:
+            quantum = max(e2e_hint / 8.0, 1e-9)
+    heap = make_queue("heap" if reference else event_queue, quantum)
+    heap_push = heap.push
     _seq = 0
 
     def push(t: float, kind: int, stage: "str | None", payload) -> None:
         nonlocal _seq
-        heapq.heappush(heap, (t, kind, _seq, stage, payload))
+        heap_push((t, kind, _seq, stage, payload))
         _seq += 1
 
     # upstream machines held busy by undelivered outputs: (stage, mid) -> count
@@ -222,6 +311,18 @@ def run_pipeline(
         avail[m][f] = t
         pend[m][f] = c
         pend_total[m] += c
+        if (
+            not reference
+            and st.queue_cap is None
+            and not st.parked
+            and st.phantom_target <= 0.0
+        ):
+            # macro-event delivery: the whole fanout enters through one
+            # dispatcher walk advance (scalar-identical; see deliver_run) —
+            # backpressure parks per-instance and phantom pacing counts
+            # per-delivery, so those regimes keep the scalar path
+            st.deliver_run(f, c, t, push)
+            return
         for _ in range(c):
             inst = Instance(f, t)
             if st.parked or not st.has_space:
@@ -332,9 +433,6 @@ def run_pipeline(
     # -- prime the loop ------------------------------------------------------
     t_first = 0.0
     if issue is not None:
-        issue = np.asarray(issue, dtype=np.float64)
-        if issue.shape != (n_frames,):
-            raise ValueError("issue times must have one entry per frame")
         for i in range(n_frames):
             push(float(issue[i]), _K_ARRIVE, None, ("issue", i, 0))
         t_first = float(issue[0]) if n_frames else 0.0
@@ -363,13 +461,26 @@ def run_pipeline(
             # core does this once at end of stream; interleaved clients can
             # also quiesce mid-run when every slot waits on a stuck frame —
             # flushing is then the only causally-consistent way forward).
-            # One stage per round, earliest in topo order: an upstream tail
-            # flush can still deliver members that complete a downstream
-            # batch, so later stages must not flush until everything above
-            # them has fully drained (the flat engine replays whole modules
-            # in topo order for exactly this reason).
+            # Per round, flush every stage whose ANCESTORS hold no more
+            # real work: an upstream tail flush can still deliver members
+            # that complete a downstream batch, so a stage must not flush
+            # until everything above it has fully drained (the flat engine
+            # replays whole modules in topo order for exactly this reason).
+            # Sibling stages, however, must flush in the SAME round: their
+            # tail completions re-enter the heap and process in global time
+            # order, so a shared child receives them in availability order
+            # — flushing one sibling per round delivered a later-flushed
+            # sibling's EARLIER completion after an earlier-flushed
+            # sibling's later one, silently reordering the child's dispatch
+            # stream relative to the flat engine's stable ready-sort.
             acted = False
+            # frozen per round: a child must not flush in the round its
+            # ancestor's tail closed — that tail's completion still has to
+            # travel through the heap and may complete the child's batch
+            stage_busy = {m: holds_real_work(stages[m]) for m in topo}
             for m in topo:
+                if any(stage_busy[a] for a in ancestors[m]):
+                    continue  # an upstream tail can still feed this stage
                 st = stages[m]
                 entries: list = []
                 for mid, core in st.cores.items():
@@ -391,8 +502,6 @@ def run_pipeline(
                 if entries:
                     deliver_entries(entries, t_now)
                 acted |= drain_parked(st, t_now)
-                if acted:
-                    break
             if not acted and not heap:
                 break
             if (
@@ -406,7 +515,7 @@ def run_pipeline(
                 push(t_now + control.interval, _K_EPOCH, None, None)
                 epoch_armed = True
             continue
-        t, kind, _s, stage_name, payload = heapq.heappop(heap)
+        t, kind, _s, stage_name, payload = heap.pop()
         t_now = max(t_now, t)
         if kind == _K_ARRIVE:
             what = payload[0]
@@ -468,9 +577,11 @@ def run_pipeline(
             # collect every machine-free at this instant before delivering,
             # so cross-machine outputs land downstream in frame order
             frees = [(stage_name, payload[0])]
-            while heap and heap[0][0] == t and heap[0][1] == _K_FREE:
-                _t, _k, _s2, sn, pl = heapq.heappop(heap)
-                frees.append((sn, pl[0]))
+            nxt = heap.peek()
+            while nxt is not None and nxt[0] == t and nxt[1] == _K_FREE:
+                heap.pop()
+                frees.append((nxt[3], nxt[4][0]))
+                nxt = heap.peek()
             entries = []
             finished: list[tuple[str, int, int]] = []
             for m, mid in frees:
@@ -535,28 +646,4 @@ def run_pipeline(
             # batch that only the quiescence flush (which requires an empty
             # heap) can resolve: let the chain lapse; the flush re-arms it
 
-    # anything still unresolved is wedged in-pipeline: account as dropped
-    for f in range(n_frames):
-        if not resolved[f]:
-            if math.isnan(issue_t[f]):
-                shed[f] = True
-            else:
-                lost[f] = True
-                sink_bad[f] = True
-
-    completed = ~np.isnan(e2e)
-    dropped = lost & ~shed & ~completed
-    skipped = ~completed & ~shed & ~dropped
-    return PipelineResult(
-        modules=tuple(topo),
-        sp=dag.sp,
-        issue=issue_t,
-        e2e=e2e,
-        avail=avail,
-        finish=finish,
-        shed=shed,
-        dropped=dropped,
-        skipped=skipped,
-        stats={m: stages[m].stats for m in topo},
-        attempts=attempts,
-    )
+    return ft.finalize(dag, {m: stages[m].stats for m in topo}, attempts)

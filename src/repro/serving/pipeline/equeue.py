@@ -1,0 +1,127 @@
+"""Event queues for the pipelined co-simulation's global loop.
+
+Two implementations of one tiny protocol (``push`` / ``pop`` / ``peek`` /
+truthiness), both serving events in exactly the same total order — the
+``(t, kind, seq)`` lexicographic order the original single ``heapq`` loop
+established (``seq`` is the global FIFO push counter, so ties at one
+instant resolve in push order and no comparison ever reaches the payload):
+
+* :class:`HeapQueue` — the original global binary heap, kept as the
+  reference implementation (`PipelineConfig(reference=True)` pins it);
+* :class:`CalendarQueue` — a bucketed calendar queue: events land in
+  buckets keyed by quantized time (``floor(t / quantum)``), bucket ids are
+  tracked in a small lazy min-heap, and each bucket is its own little heap.
+  Pushes into the *current* bucket (the dominant pattern: a batch closing
+  at ``t`` schedules its free at ``t + d``, which usually lands a few
+  buckets ahead, while flush/epoch chains land locally) pay ``log`` of the
+  bucket population instead of ``log`` of the whole outstanding event set;
+  the core's macro-event drains (same-instant machine-free batching) walk
+  the front bucket via ``peek``/``pop`` without re-heapifying the rest.
+
+The quantum defaults to the mean event spacing hint the caller derives from
+the issue stream; correctness never depends on it (a degenerate quantum
+just turns the calendar into one global heap plus a dict lookup).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+
+
+class HeapQueue:
+    """The original single global binary heap (reference ordering)."""
+
+    __slots__ = ("_h",)
+
+    def __init__(self):
+        self._h: list = []
+
+    def push(self, entry: tuple) -> None:
+        heapq.heappush(self._h, entry)
+
+    def pop(self) -> tuple:
+        return heapq.heappop(self._h)
+
+    def peek(self) -> "tuple | None":
+        return self._h[0] if self._h else None
+
+    def __bool__(self) -> bool:
+        return bool(self._h)
+
+    def __len__(self) -> int:
+        return len(self._h)
+
+
+class CalendarQueue:
+    """Bucketed calendar queue over ``(t, kind, seq, stage, payload)`` tuples.
+
+    ``buckets[b]`` holds a heap of the entries with ``floor(t / quantum)
+    == b``; ``_bids`` is a lazy min-heap of bucket ids (duplicates allowed,
+    emptied buckets skipped at pop).  Total order served is identical to
+    one global heap: bucket ids order by time prefix, and within a bucket
+    the per-bucket heap orders by the same ``(t, kind, seq)`` key.
+    """
+
+    __slots__ = ("_q", "_inv_q", "_buckets", "_bids", "_n")
+
+    def __init__(self, quantum: float = 1e-3):
+        if not (quantum > 0.0) or not math.isfinite(quantum):
+            raise ValueError(f"quantum must be positive and finite, got {quantum}")
+        self._q = quantum
+        self._inv_q = 1.0 / quantum
+        self._buckets: dict[int, list] = {}
+        self._bids: list[int] = []  # lazy min-heap of (possibly stale) bucket ids
+        self._n = 0
+
+    def push(self, entry: tuple) -> None:
+        b = int(entry[0] * self._inv_q)
+        bucket = self._buckets.get(b)
+        if bucket is None:
+            self._buckets[b] = [entry]
+            heapq.heappush(self._bids, b)
+        else:
+            heapq.heappush(bucket, entry)
+        self._n += 1
+
+    def _front(self) -> "tuple[int, list]":
+        """The non-empty minimum bucket (lazily discarding stale ids).
+
+        Emptied buckets are deleted eagerly at pop, so a ``_bids`` entry
+        either points at a live bucket or at nothing — a re-push into a
+        drained quantum always re-registers its id.
+        """
+        buckets, bids = self._buckets, self._bids
+        while True:
+            b = bids[0]
+            bucket = buckets.get(b)
+            if bucket is not None:
+                return b, bucket
+            heapq.heappop(bids)
+
+    def pop(self) -> tuple:
+        b, bucket = self._front()
+        self._n -= 1
+        entry = heapq.heappop(bucket)
+        if not bucket:
+            del self._buckets[b]
+        return entry
+
+    def peek(self) -> "tuple | None":
+        if self._n == 0:
+            return None
+        return self._front()[1][0]
+
+    def __bool__(self) -> bool:
+        return self._n > 0
+
+    def __len__(self) -> int:
+        return self._n
+
+
+def make_queue(kind: str, quantum: "float | None" = None):
+    """Build the configured event queue (``"heap"`` | ``"calendar"``)."""
+    if kind == "heap":
+        return HeapQueue()
+    if kind == "calendar":
+        return CalendarQueue(quantum if quantum else 1e-3)
+    raise ValueError(f"unknown event queue {kind!r}")

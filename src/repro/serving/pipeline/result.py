@@ -23,12 +23,90 @@ under budget and donated slack).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Mapping
+from typing import Mapping, Sequence
 
 import numpy as np
 
 from ...core.dag import SP, sp_critical_masks
 from .stages import StageStats
+
+
+class FrameTable:
+    """Preallocated struct-of-arrays per-frame state, indexed by frame id.
+
+    One numpy column per fact the co-simulation tracks about a frame —
+    issue/shed/lost flags, per-stage availability / finish timestamps,
+    outstanding fanout counts (``pend``), parent join counters — shared by
+    the event-by-event loop (which mutates single cells as events fire) and
+    the segment fast-path (which fills whole columns vectorized).  Keeping
+    every record columnar is what lets both producers :meth:`finalize` into
+    the same :class:`PipelineResult` with one vectorized classification
+    pass, and what keeps the result object O(arrays), not O(frames) Python
+    objects, at 10^5+ frames.
+    """
+
+    __slots__ = (
+        "n", "topo", "issue", "shed", "lost", "resolved", "sink_bad",
+        "sink_max", "sinks_left", "e2e", "avail", "finish", "pend",
+        "parents_left", "child_void", "child_avail",
+    )
+
+    def __init__(
+        self,
+        n_frames: int,
+        topo: Sequence[str],
+        parents: Mapping[str, Sequence[str]],
+        n_sinks: int,
+    ):
+        n = n_frames
+        self.n = n
+        self.topo = tuple(topo)
+        self.issue = np.full(n, np.nan)
+        self.shed = np.zeros(n, dtype=bool)
+        self.lost = np.zeros(n, dtype=bool)      # materialized instances, none done
+        self.resolved = np.zeros(n, dtype=bool)
+        self.sink_bad = np.zeros(n, dtype=bool)  # some sink never completed
+        self.sink_max = np.zeros(n)
+        self.sinks_left = np.full(n, n_sinks, dtype=np.int64)
+        self.e2e = np.full(n, np.nan)
+        self.avail = {m: np.full(n, np.nan) for m in topo}
+        self.finish = {m: np.full(n, np.nan) for m in topo}
+        self.pend = {m: np.zeros(n, dtype=np.int64) for m in topo}
+        self.parents_left = {
+            m: np.full(n, len(parents[m]), dtype=np.int64) for m in topo
+        }
+        self.child_void = {m: np.zeros(n, dtype=bool) for m in topo}
+        self.child_avail = {m: np.zeros(n) for m in topo}
+
+    def finalize(self, dag, stats: dict, attempts: int) -> "PipelineResult":
+        """Classify every frame and assemble the result (one vector pass).
+
+        Frames still unresolved at end of run are wedged in-pipeline: never
+        issued -> shed, otherwise lost (their sinks can never complete).
+        """
+        un = ~self.resolved
+        if un.any():
+            never_issued = un & np.isnan(self.issue)
+            self.shed |= never_issued
+            wedged = un & ~never_issued
+            self.lost |= wedged
+            self.sink_bad |= wedged
+        completed = ~np.isnan(self.e2e)
+        dropped = self.lost & ~self.shed & ~completed
+        skipped = ~completed & ~self.shed & ~dropped
+        return PipelineResult(
+            modules=self.topo,
+            sp=dag.sp,
+            issue=self.issue,
+            e2e=self.e2e,
+            avail=self.avail,
+            finish=self.finish,
+            shed=self.shed,
+            dropped=dropped,
+            skipped=skipped,
+            stats=stats,
+            attempts=attempts,
+        )
 
 
 @dataclass

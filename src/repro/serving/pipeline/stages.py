@@ -78,6 +78,38 @@ class TCDispatcher:
         self._left -= 1
         return self._cur
 
+    def assign_run(self, count: int) -> "list[tuple[int, int]]":
+        """Assign ``count`` consecutive arrivals in one walk advance.
+
+        Returns run-length pairs ``[(mid, k)]`` — exactly the machines the
+        scalar :meth:`assign` would have produced for ``count`` successive
+        calls, but advancing the virtual-time walk run-by-run instead of
+        request-by-request (the macro-event form of the TC walk: one
+        ``min()`` per *batch*, not per instance)."""
+        runs: list[tuple[int, int]] = []
+        while count > 0:
+            if self._left == 0:
+                i = min(
+                    range(len(self.machines)),
+                    key=lambda j: (
+                        self._next_t[self.machines[j].mid],
+                        -self.machines[j].config.ratio,
+                        j,
+                    ),
+                )
+                m = self.machines[i]
+                self._cur = m.mid
+                self._left = m.config.batch
+                self._next_t[m.mid] += m.config.batch / m.rate
+            k = self._left if self._left < count else count
+            self._left -= k
+            count -= k
+            if runs and runs[-1][0] == self._cur:
+                runs[-1] = (self._cur, runs[-1][1] + k)
+            else:
+                runs.append((self._cur, k))
+        return runs
+
     def update(self, machines: Sequence[Machine]) -> None:
         old = self._next_t
         self.machines = list(machines)
@@ -106,6 +138,18 @@ class RRDispatcher:
         mid = self.machines[j].mid
         self._credit[mid] -= 1.0
         return mid
+
+    def assign_run(self, count: int) -> "list[tuple[int, int]]":
+        """Deficit walk for ``count`` arrivals, merged into run-length pairs
+        (scalar-identical; RR interleaves, so runs are usually length 1)."""
+        runs: list[tuple[int, int]] = []
+        for _ in range(count):
+            mid = self.assign()
+            if runs and runs[-1][0] == mid:
+                runs[-1] = (mid, runs[-1][1] + 1)
+            else:
+                runs.append((mid, 1))
+        return runs
 
     def update(self, machines: Sequence[Machine]) -> None:
         old = self._credit
@@ -184,6 +228,7 @@ class ModuleStage:
             t_of = {m.mid: timeout for m in machines}
         self.name = name
         self.machines = list(machines)
+        self.policy = policy  # the segment fast-path re-derives dispatch_runs
         self.cores = {m.mid: MachineCore(m, t_of[m.mid]) for m in machines}
         self._next_mid = max((m.mid for m in machines), default=-1) + 1
         self.dispatcher = make_dispatcher(machines, policy)
@@ -345,6 +390,38 @@ class ModuleStage:
             push(deadline, _K_FLUSH, self.name, (mid, core.token))
         if core.full:
             self.close(mid, batch_ready=now, now=now, push=push)
+
+    def deliver_run(self, frame: int, count: int, now: float, push: Callable) -> None:
+        """Hand ``count`` same-instant REAL instances of ``frame`` to the
+        dispatcher in one macro-event.
+
+        Scalar-identical to ``count`` successive :meth:`deliver` calls when
+        the stage is unbounded (``queue_cap is None``), has nothing parked,
+        and streams no phantoms — the caller gates on exactly those
+        conditions.  The dispatcher advances run-by-run (one walk step per
+        batch) and each run's members join the formation buffer as a block:
+        the buffer fills/closes at the same member boundaries, the flush
+        deadline arms on the same (first real) member at the same instant,
+        and frees are pushed in the same order, so every downstream event
+        carries the same ``(t, kind, seq)`` key as the scalar path."""
+        self.delivered += count
+        self.backlog += count
+        for mid, k in self.dispatcher.assign_run(count):
+            core = self.cores[mid]
+            buf = core.buf
+            batch = core.machine.config.batch
+            while k > 0:
+                take = batch - len(buf)
+                if take > k:
+                    take = k
+                if not core.armed and core.timeout is not None:
+                    core.armed = True
+                    push(now + core.timeout, _K_FLUSH, self.name, (mid, core.token))
+                buf.extend(Instance(frame, now) for _ in range(take))
+                k -= take
+                if len(buf) >= batch:
+                    self.close(mid, batch_ready=now, now=now, push=push)
+                    buf = core.buf  # close swapped in a fresh buffer
 
     def close(self, mid: int, batch_ready: float, now: float, push: Callable) -> None:
         self.cores[mid].close(batch_ready)

@@ -9,8 +9,13 @@ seconds.  The two key identities:
   reshape — one vectorized check confirms no deadline fires mid-stream and
   falls back to a per-batch greedy scan (still O(batches)) when traffic is
   bursty enough that it does;
-* the FIFO service chain ``end_g = max(ready_g, end_{g-1}) + d`` unrolls to
-  ``end_g = d*(g+1) + cummax(ready_g - d*g)`` — a single prefix-max.
+* the FIFO service chain ``end_g = max(ready_g, end_{g-1}) + d`` runs as one
+  short loop per *batch* in exactly the event core's operation order, so the
+  kernel's finish times are BIT-identical to the event-driven cores (the
+  prefix-max closed form is the same value only to float association) —
+  which is what lets the pipelined co-simulation's segment fast-path
+  (`repro.serving.pipeline.fastpath`) delegate to this kernel without
+  perturbing a single bit.
 
 Property tests (tests/test_event_core.py) pin this kernel to the event core,
 and golden tests pin both to the frozen seed loops in
@@ -193,9 +198,23 @@ def replay_machine(
     ng = sizes.size
     if ng == 0:
         return finish, 0
-    # FIFO service chain as a prefix max
-    g = np.arange(ng, dtype=np.float64)
-    end = duration * (g + 1.0) + np.maximum.accumulate(g_ready - duration * g)
+    # FIFO service chain: end_g = max(ready_g, end_{g-1}) + d, evaluated
+    # with exactly the event core's operation order so the kernel is
+    # BIT-identical to `simulate_module_events` (and to the pipelined
+    # co-simulation's MachineCore chain), not merely equal to ~1e-15 — the
+    # prefix-max closed form `d*(g+1) + cummax(ready_g - d*g)` is the same
+    # number algebraically but associates the additions differently.  One
+    # Python iteration per *batch* keeps this O(n / batch), a rounding
+    # error on the kernel's total runtime.
+    end_l: list[float] = []
+    append = end_l.append
+    prev = -math.inf
+    for r in g_ready.tolist():
+        if prev > r:
+            r = prev
+        prev = r + duration
+        append(prev)
+    end = np.asarray(end_l)
     covered = int(sizes.sum())
     finish[:covered] = np.repeat(end, sizes)
     return finish, ng
@@ -260,23 +279,22 @@ def replay_module(
     return ModuleReplay(finish, assignment, batches, phantom)
 
 
-def expand_fanout(frames: np.ndarray, fanout: float) -> np.ndarray:
-    """Expand ready-ordered frame ids into module-level request instances.
+def fanout_counts(n: int, fanout: float) -> np.ndarray:
+    """Per-position instance counts of the seed fractional accumulator.
 
-    Frame ``i`` (in stream order) contributes ``floor(S_i) - floor(S_{i-1})``
-    instances where ``S_i = fanout * (i+1)`` — the seed engine's fractional
-    accumulator.  Fanouts that are multiples of 0.5 (every seed app) are
-    exact in binary floating point, so the vectorized floor-difference is
+    Position ``i`` (0-based, in stream order) contributes
+    ``floor(S_i) - floor(S_{i-1})`` instances where ``S_i = fanout *
+    (i+1)``.  Fanouts that are multiples of 0.5 (every seed app) are exact
+    in binary floating point, so the vectorized floor-difference is
     bit-identical to the accumulator loop; other fanouts take the loop to
-    preserve its exact rounding drift.
+    preserve its exact rounding drift (`pipeline.fanout.AccumulatorFanout`
+    realizes the same semantics one frame at a time).
     """
-    n = frames.size
     if n == 0:
-        return frames[:0]
+        return np.zeros(0, dtype=np.int64)
     if float(2.0 * fanout).is_integer():
         cum = np.floor(fanout * np.arange(1, n + 1))
-        counts = np.diff(np.concatenate([[0.0], cum])).astype(np.int64)
-        return np.repeat(frames, counts)
+        return np.diff(np.concatenate([[0.0], cum])).astype(np.int64)
     counts_l = []
     acc = 0.0
     for _ in range(n):
@@ -284,4 +302,12 @@ def expand_fanout(frames: np.ndarray, fanout: float) -> np.ndarray:
         k = int(acc)
         acc -= k
         counts_l.append(k)
-    return np.repeat(frames, np.asarray(counts_l, np.int64))
+    return np.asarray(counts_l, np.int64)
+
+
+def expand_fanout(frames: np.ndarray, fanout: float) -> np.ndarray:
+    """Expand ready-ordered frame ids into module-level request instances
+    (see `fanout_counts` for the accumulator semantics)."""
+    if frames.size == 0:
+        return frames[:0]
+    return np.repeat(frames, fanout_counts(frames.size, fanout))

@@ -1,0 +1,144 @@
+"""Burst-aware budget deadlines for dummy streaming (PR-4 finding closure).
+
+The PR-4 ROADMAP finding: ``timeout="budget"`` + dummy streaming collapses
+in pipeline mode downstream of batched stages — the zero-slack
+``budget - d`` deadline flushes a partial batch whenever an upstream
+inter-completion gap straddles it, and the wasted partial services snowball
+at 100% utilization (attainment below 0.5 at 1.0x provisioning on uniform
+arrivals).  ``FrontendConfig(burst_deadline=True)`` closes it by mirroring
+the burst-aware WCL quantum on the deadline side (one upstream
+batch-arrival quantum, `engine.plan_burst`) plus the padded-fill floor
+(the adaptive injector's 1.5-slot pacing law bounds how fast phantoms can
+actually fill a batch).  Flag off preserves the exact PR-4 semantics —
+collapse included — so golden equivalence is untouched.
+"""
+import numpy as np
+import pytest
+
+from repro.core.dag import AppDAG, Leaf, Workload, series
+from repro.core.dispatch import Policy, expand_machines
+from repro.core.harpagon import Plan, PlannerOptions
+from repro.core.profiles import Config, ModuleProfile
+from repro.core.residual import schedule_module
+from repro.serving import ServingEngine
+from repro.serving.engine import plan_burst, resolve_module_timeout
+from repro.serving.frontend import FrontendConfig
+
+
+def chain_plan(specs, rate: float, slo: float) -> Plan:
+    leaves = [Leaf(n) for n, _, _ in specs]
+    app = AppDAG("chain", series(*leaves))
+    scheds, rates = {}, {}
+    for name, cfgs, budget in specs:
+        s = schedule_module(
+            name, rate, budget, ModuleProfile(name, tuple(cfgs)), Policy.TC,
+            use_dummy=False,
+        )
+        assert s is not None, name
+        scheds[name] = s
+        rates[name] = rate
+    return Plan(Workload(app, rates, slo), PlannerOptions(), scheds, True, 0.0)
+
+
+def collapse_plan() -> Plan:
+    """A (batch 16) -> B (batch 6) at one shared rate: every upstream
+    completion delivers 16 instances = 2 full B batches + a 4-instance
+    leftover whose opener must survive the 0.8 s inter-completion gap
+    against a 0.3 s zero-slack deadline — the gap-straddle flush, every
+    cycle, with a full-duration service wasted each time."""
+    return chain_plan(
+        [("A", [Config(16, 0.8)], 1.61), ("B", [Config(6, 0.3)], 0.61)],
+        20.0, 3.2,
+    )
+
+
+class TestCollapseRegression:
+    def test_pipeline_collapse_and_closure(self):
+        """Satellite acceptance: the <0.5-attainment collapse reproduces
+        with the flag off and closes completely with it on."""
+        eng = ServingEngine(collapse_plan())
+        base = eng.run(
+            600, 20.0, timeout="budget",
+            frontend=FrontendConfig(dummies=True), pipeline=True,
+        )
+        fixed = eng.run(
+            600, 20.0, timeout="budget",
+            frontend=FrontendConfig(dummies=True, burst_deadline=True),
+            pipeline=True,
+        )
+        assert base.attainment < 0.5  # the finding, reproduced
+        assert fixed.attainment == 1.0
+        # the fix works by NOT flushing the straddled leftover: fewer,
+        # fuller batches at B instead of a wasted partial every cycle
+        assert fixed.module_stats["B"].batches < base.module_stats["B"].batches
+
+    def test_flat_engine_inherits_fix(self):
+        """The flat engine shares the deadline semantics (and the finding);
+        the flag must behave the same there."""
+        eng = ServingEngine(collapse_plan())
+        base = eng.run(
+            600, 20.0, timeout="budget",
+            frontend=FrontendConfig(dummies=True),
+        )
+        fixed = eng.run(
+            600, 20.0, timeout="budget",
+            frontend=FrontendConfig(dummies=True, burst_deadline=True),
+        )
+        assert base.attainment < 0.5
+        assert fixed.attainment >= 0.99
+
+    def test_flag_off_is_bit_exact_with_pr4_semantics(self):
+        """burst_deadline=False must not perturb a single bit."""
+        eng = ServingEngine(collapse_plan())
+        a = eng.run(
+            300, 20.0, timeout="budget",
+            frontend=FrontendConfig(dummies=True), pipeline=True,
+        )
+        b = eng.run(
+            300, 20.0, timeout="budget",
+            frontend=FrontendConfig(dummies=True, burst_deadline=False),
+            pipeline=True,
+        )
+        np.testing.assert_array_equal(a.pipeline.e2e, b.pipeline.e2e)
+
+
+class TestDeadlineResolution:
+    def test_plan_burst_is_upstream_quantum(self):
+        plan = collapse_plan()
+        assert plan_burst(plan, "A") == 0.0  # source: no upstream batching
+        # B's quantum: one upstream batch's arrival time b_up / rate_up
+        assert plan_burst(plan, "B") == pytest.approx(16 / 20.0)
+
+    def test_burst_deadline_adds_quantum_and_floor(self):
+        plan = collapse_plan()
+        s = plan.schedules["B"]
+        machines = expand_machines(list(s.allocs))
+        off = resolve_module_timeout(s, machines, "budget", Policy.TC, dummies=True)
+        on = resolve_module_timeout(
+            s, machines, "budget", Policy.TC, dummies=True,
+            burst=plan_burst(plan, "B"),
+        )
+        coll = sum(a.rate + a.dummy for a in s.allocs)
+        for mm in machines:
+            assert off[mm.mid] == pytest.approx(
+                max(s.budget - mm.config.duration, 0.0)
+            )
+            floor = 2.0 * (mm.config.batch + 1.5) / coll
+            assert on[mm.mid] == pytest.approx(
+                max(s.budget - mm.config.duration, floor) + 16 / 20.0
+            )
+            assert on[mm.mid] > off[mm.mid]
+
+    def test_non_dummy_and_fixed_timeouts_unaffected(self):
+        plan = collapse_plan()
+        s = plan.schedules["B"]
+        machines = expand_machines(list(s.allocs))
+        # the flag only touches the dummy-streaming "budget" branch
+        assert resolve_module_timeout(s, machines, None, Policy.TC, burst=1.0) is None
+        assert resolve_module_timeout(s, machines, 0.25, Policy.TC, burst=1.0) == 0.25
+        w_real = resolve_module_timeout(
+            s, machines, "budget", Policy.TC, dummies=False, burst=1.0
+        )
+        assert w_real == resolve_module_timeout(
+            s, machines, "budget", Policy.TC, dummies=False
+        )
