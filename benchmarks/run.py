@@ -498,7 +498,14 @@ def bench_pipeline_speed(n: int) -> None:
     flat kernel) with BIT-identical per-frame results.  Under ``--smoke``
     the stream shrinks to 2*10^4 frames and a speedup below 3x, a fast-path
     frame rate below 10^5 frames/s, or any result disagreement FAILS the
-    run — the pipeline hot-path regression gate."""
+    run — the pipeline hot-path regression gate.
+
+    A second matrix leg replays the dummy-streaming ``burst_deadline``
+    configuration (budget deadlines + phantom fill — the PR-5 partial-flush
+    collapse surface) reference-vs-default and gates on agreement alone:
+    that path stays on the event loop, so there is no speed target, but a
+    divergence between the two drivers is exactly the regression the plain
+    leg cannot see."""
     import numpy as np
 
     from repro.serving.pipeline import PipelineConfig
@@ -558,6 +565,135 @@ def bench_pipeline_speed(n: int) -> None:
             file=sys.stderr,
         )
         raise SystemExit(1)
+
+    # burst-deadline matrix leg: same reference-vs-default agreement gate
+    # on the dummy-streaming budget-deadline path (event loop both ways)
+    fe = FrontendConfig(dummies=True, burst_deadline=True)
+    n_burst = 6_000 if SMOKE else 20_000
+    ref_b, us_ref_b = common.timed(
+        lambda: eng.run(
+            n_burst, rate, arrivals="poisson", frontend=fe, timeout="budget",
+            pipeline=PipelineConfig(reference=True),
+        ),
+        repeat=1,
+    )
+    fast_b, us_fast_b = common.timed(
+        lambda: eng.run(
+            n_burst, rate, arrivals="poisson", frontend=fe, timeout="budget",
+            pipeline=True,
+        ),
+        repeat=1,
+    )
+    agree_b = bool(
+        np.array_equal(ref_b.pipeline.e2e, fast_b.pipeline.e2e, equal_nan=True)
+        and all(
+            np.array_equal(
+                ref_b.pipeline.finish[m], fast_b.pipeline.finish[m],
+                equal_nan=True,
+            )
+            for m in ref_b.pipeline.modules
+        )
+    )
+    emit(
+        "pipeline_speed_burst",
+        us_fast_b,
+        f"reference={us_ref_b / 1e6:.2f}s|default={us_fast_b / 1e6:.2f}s"
+        f"|n={n_burst:g}|agree={agree_b}|gate=agreement",
+        n_frames=n_burst,
+        agree=agree_b,
+    )
+    if SMOKE and not agree_b:
+        print(
+            "# SMOKE FAILURE: burst_deadline pipeline leg disagrees "
+            "reference vs default",
+            file=sys.stderr,
+        )
+        raise SystemExit(1)
+
+
+def bench_wallclock_gap(n: int) -> None:
+    """Analytic-vs-measured service-time gap per arch at b in {1, 8, 32} —
+    the simulator-to-serving calibration row (ISSUE-6).
+
+    Full mode times real jitted reduced-model forwards on CPU through
+    `LiveServiceTime` (warmup retires the compile transient) and reports
+    the measured/analytic duration ratio's mean and p99 per batch size;
+    the analytic side is the same roofline profile the planner consumes,
+    so the row tracks exactly the divergence *Beyond Inference*-style host
+    overheads introduce.  Under ``--smoke`` the measurements are replayed
+    from a seeded recorded trace through `TraceServiceTime` (deterministic,
+    no jax compile) — CI exercises the trace backend and the gap
+    accounting at zero compile cost."""
+    import numpy as np
+
+    from repro.core.dispatch import Config as _Cfg
+    from repro.core.dispatch import Machine as _Machine
+    from repro.profiling import arch_profile
+    from repro.serving import LiveServiceTime, TraceServiceTime
+
+    from repro.configs import get_config
+
+    archs = ("smollm-360m", "gemma3-1b")
+    batches = (1, 8, 32)
+    seq = 32
+    repeats = 5 if SMOKE else max(5, min(n // 10, 20))
+    for arch in archs:
+        cfg = get_config(arch, smoke=True)
+        prof = arch_profile(cfg, seq=seq, batches=batches)
+        analytic = {
+            b: min(c.duration for c in prof.configs if c.batch == b)
+            for b in batches
+        }
+        if SMOKE:
+            # recorded-trace stand-in: a fixed calibration offset plus
+            # seeded lognormal scatter, drawn through the trace backend
+            rng = np.random.default_rng(0)
+            samples = {
+                (arch, b): [
+                    analytic[b] * 1.2 * float(np.exp(0.05 * rng.standard_normal()))
+                    for _ in range(repeats + 1)
+                ]
+                for b in batches
+            }
+            src = TraceServiceTime(samples)
+            backend = "trace"
+        else:
+            import jax
+            import jax.numpy as jnp
+
+            from repro.models import Model
+
+            model = Model(cfg)
+            params = model.init(jax.random.key(0))
+            fwd = jax.jit(lambda p, t, m=model: m.forward(p, t).logits)
+
+            def ex(b, fwd=fwd, params=params):
+                fwd(params, jnp.zeros((b, seq), jnp.int32)).block_until_ready()
+
+            src = LiveServiceTime({arch: ex}, warmup=1, cache=False)
+            backend = "live"
+        parts = []
+        data = {"backend": backend, "seq": seq}
+        for b in batches:
+            mach = _Machine(
+                mid=0,
+                config=_Cfg(batch=b, duration=analytic[b], hardware="tpu-v5e"),
+                rate=1.0,
+            )
+            draws = np.array(
+                [src.duration(arch, mach, b) for _ in range(repeats + 1)]
+            )[1:]  # first draw = warmup (live) / align the trace cursor
+            gaps = draws / analytic[b]
+            g_mean, g_p99 = float(gaps.mean()), float(np.percentile(gaps, 99))
+            parts.append(f"b{b}={g_mean:.2f}x/p99={g_p99:.2f}x")
+            data[f"gap_mean_b{b}"] = round(g_mean, 4)
+            data[f"gap_p99_b{b}"] = round(g_p99, 4)
+        emit(
+            f"wallclock_gap_{arch}",
+            0.0,
+            "|".join(parts) + f"|backend={backend}",
+            **data,
+        )
 
 
 def bench_planner_speed(n: int) -> None:
@@ -660,6 +796,7 @@ BENCHES = {
     "pipeline_sweep": bench_pipeline_sweep,
     "diurnal_sweep": bench_diurnal_sweep,
     "pipeline_speed": bench_pipeline_speed,
+    "wallclock_gap": bench_wallclock_gap,
     "planner_speed": bench_planner_speed,
     "replay": bench_replay_speed,
     "runtime": bench_runtime,
@@ -668,7 +805,7 @@ BENCHES = {
 # serving-subsystem rows tracked across PRs by `--json` (BENCH_serving.json)
 _SERVING_PREFIXES = (
     "replay_", "slo_sweep_", "shed_sweep_", "pipeline_sweep_", "diurnal_",
-    "pipeline_speed", "planner_speed",
+    "pipeline_speed", "planner_speed", "wallclock_gap_",
 )
 
 # --smoke: CI-sized inputs + hard regression gates (see bench_replay_speed)

@@ -237,10 +237,24 @@ class Planner:
         self._replan_cache: dict[tuple, Plan] = {}
         self._cache_size = cache_size
 
-    def _cache_key(self, wl: Workload, tolerance: float) -> tuple:
+    def _cache_key(
+        self,
+        wl: Workload,
+        tolerance: float,
+        profiles: "Mapping[str, ModuleProfile] | None" = None,
+    ) -> tuple:
         # the tolerance is part of the key: the same bucket integer under a
         # different quantization step maps to a completely different rate
         q = math.log1p(max(tolerance, 1e-6))
+        # so is a cheap profile fingerprint: a control loop correcting
+        # profiles toward measured durations must not replay plans memoized
+        # under the uncorrected (or differently corrected) durations
+        fp = ()
+        if profiles is not None:
+            fp = tuple(
+                (m, len(p.configs), round(sum(c.duration for c in p.configs), 12))
+                for m, p in sorted(profiles.items())
+            )
         return (
             wl.app.name,
             round(wl.slo, 9),
@@ -249,6 +263,7 @@ class Planner:
                 int(round(math.log(max(float(wl.rates[m]), 1e-12)) / q))
                 for m in wl.app.modules
             ),
+            fp,
         )
 
     # -- profile preparation -------------------------------------------------
@@ -452,6 +467,7 @@ class Planner:
         *,
         tolerance: float = 0.02,
         cost_guard: float = 0.01,
+        force: "frozenset[str] | set[str]" = frozenset(),
     ) -> Plan:
         """Warm-start incremental repair of ``prev`` for ``new_rates``.
 
@@ -475,10 +491,17 @@ class Planner:
         The result carries ``version = prev.version + 1`` and per-module
         ``provenance`` ("reused" | "repaired" | "cached" | "cold");
         ``prev.diff(new)`` yields the hot-swap delta.
+
+        ``force`` names modules that must be re-solved even when their rate
+        sits within tolerance — the control plane passes the modules whose
+        *profiles* were just corrected toward measured durations, since a
+        rate-drift test alone would happily reuse an allocation sized under
+        the stale durations.
         """
         with wcl_memo():
             return self._replan_impl(
-                prev, new_rates, profiles, tolerance=tolerance, cost_guard=cost_guard
+                prev, new_rates, profiles, tolerance=tolerance,
+                cost_guard=cost_guard, force=frozenset(force),
             )
 
     def _replan_impl(
@@ -489,6 +512,7 @@ class Planner:
         *,
         tolerance: float,
         cost_guard: float,
+        force: frozenset,
     ) -> Plan:
         t0 = time.perf_counter()
         o = self.options
@@ -498,7 +522,7 @@ class Planner:
             tag=f"{prev.workload.app.name}@replan-v{prev.version + 1}",
         )
 
-        key = self._cache_key(wl, tolerance)
+        key = self._cache_key(wl, tolerance, profiles)
         hit = self._replan_cache.get(key)
         if hit is not None and all(
             float(new_rates[m])
@@ -553,7 +577,8 @@ class Planner:
             r1 = float(new_rates[m])
             drift = abs(r1 - s_prev.rate)
             if (
-                drift <= tolerance * max(s_prev.rate, _EPS)
+                m not in force
+                and drift <= tolerance * max(s_prev.rate, _EPS)
                 and r1 <= collect_capacity(list(s_prev.allocs)) + _EPS
             ):
                 schedules[m] = s_prev

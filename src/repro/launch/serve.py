@@ -9,6 +9,9 @@ event simulation at full scale.
       --rate 200 --slo 0.5 --requests 2000
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b,qwen1.5-4b \
       --rate 120 --slo 1.0            # two-module chain
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --real \
+      --pipeline --epoch 2.0          # pipelined co-sim against measured
+                                      # step times + epoch audit/replan
 """
 from __future__ import annotations
 
@@ -24,7 +27,7 @@ from ..core.dag import AppDAG
 from ..core.harpagon import Planner
 from ..models import Model
 from ..profiling import arch_profile
-from ..serving import ServingEngine
+from ..serving import ControlLoopConfig, ServingEngine
 
 
 def main() -> None:
@@ -36,7 +39,21 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--real", action="store_true", help="execute reduced models on CPU")
     ap.add_argument("--compare", action="store_true", help="plan with all 5 systems")
+    ap.add_argument(
+        "--pipeline", action="store_true",
+        help="serve through the pipelined DAG co-simulation (with --real, "
+        "batch service times are measured executor forwards)",
+    )
+    ap.add_argument(
+        "--epoch", type=float, default=0.0,
+        help="control-loop epoch interval in seconds (0 = control off); "
+        "with --real each epoch audits modeled vs measured service time "
+        "and replans against the corrected profiles",
+    )
     args = ap.parse_args()
+    if args.epoch and not args.pipeline:
+        ap.error("--epoch requires --pipeline (the control loop lives in "
+                 "the pipelined serving loop)")
 
     archs = args.arch.split(",")
     dag = AppDAG("session", series(*[Leaf(a) for a in archs]))
@@ -70,13 +87,40 @@ def main() -> None:
             executors[a] = ex
 
     engine = ServingEngine(plan, executors=executors)
-    res = engine.run(args.requests, args.rate)
+    control = (
+        ControlLoopConfig(interval=args.epoch, profiles=profiles)
+        if args.epoch
+        else None
+    )
+    res = engine.run(
+        args.requests,
+        args.rate,
+        pipeline=args.pipeline,
+        control=control,
+        service_time="live" if (args.real and args.pipeline) else None,
+    )
     print(
         f"served {len(res.e2e_latencies)} requests: SLO attainment "
         f"{100 * res.attainment:.2f}%  p99={res.p99:.4f}s  slo={args.slo}s"
     )
     for m, st in res.module_stats.items():
         print(f"  {m}: batches={st.batches} max_latency={st.max_latency:.4f}s")
+    if res.epochs:
+        # the control loop's model-vs-measured audit: mean relative
+        # |measured - modeled| service time per epoch, plus the profile
+        # corrections the replan ran under
+        for e in res.epochs:
+            corr = (
+                " corrections=" + ",".join(
+                    f"{m}:{s:.2f}" for m, s in sorted(e.corrections.items())
+                )
+                if e.corrections
+                else ""
+            )
+            print(
+                f"  epoch t={e.t:8.3f}s target={e.target:8.1f}/s "
+                f"cost={e.cost:7.1f} duration_err={e.duration_err:.3f}{corr}"
+            )
 
 
 if __name__ == "__main__":

@@ -1,8 +1,16 @@
 from .analytic import arch_profile, module_duration
 from .analytics import flops_per_token, kv_cache_bytes_per_token, param_count
 from .hardware import CATALOG, TARGET, TPUSpec
+from .measured import (
+    corrected_profile,
+    corrected_profiles,
+    duration_scale,
+    quantize_scale,
+)
 
 __all__ = [
-    "CATALOG", "TARGET", "TPUSpec", "arch_profile", "flops_per_token",
+    "CATALOG", "TARGET", "TPUSpec", "arch_profile", "corrected_profile",
+    "corrected_profiles", "duration_scale", "flops_per_token",
     "kv_cache_bytes_per_token", "module_duration", "param_count",
+    "quantize_scale",
 ]

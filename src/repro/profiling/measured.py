@@ -1,0 +1,89 @@
+"""Measured-profile correction: fold observed service durations into profiles.
+
+The planner optimizes against offline profiles (here: the analytic TPU
+roofline of `profiling.analytic`).  When the serving loop measures actual
+batch durations (`repro.serving.service_time` trace/live sources), the
+control plane needs profiles that reflect reality — otherwise every epoch
+replans against the same miscalibrated roofline and provisions the same
+wrong machine count.  This module is the small algebra for that correction:
+
+* per-module duration *scale* estimation from ``(modeled, measured)``
+  observation pairs (throughput-weighted: each pair contributes its
+  modeled-duration weight, so big-batch observations dominate exactly as
+  they dominate machine occupancy);
+* **log-quantization** of scales (`quantize_scale`) so an epoch-to-epoch
+  estimator wobble of a few percent maps to the *same* corrected profile —
+  keeping `Planner.replan`'s memo cache hot and the hot-swap stream free of
+  correction-noise churn;
+* `corrected_profile` / `corrected_profiles` — scaled copies of the
+  original profiles (every config's duration multiplied; throughput and
+  ratio re-derive automatically).
+
+Corrections are always expressed against the ORIGINAL profiles, never
+compounded onto previously corrected ones: the estimator ratio is
+measured-vs-original-modeled, so applying it twice would square it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Mapping
+
+from ..core.profiles import Config, ModuleProfile
+
+
+def duration_scale(pairs: "Iterable[tuple[float, float]]") -> float:
+    """Measured/modeled duration scale from ``(modeled, measured)`` pairs.
+
+    The ratio of weighted sums (not the mean of ratios): each observation
+    contributes proportionally to its modeled duration, so one noisy tiny
+    batch cannot swing the scale a fleet of large batches runs under.
+    Returns 1.0 with no observations.
+    """
+    num = den = 0.0
+    for modeled, measured in pairs:
+        if modeled <= 0.0 or measured <= 0.0:
+            continue
+        num += measured
+        den += modeled
+    return num / den if den > 0.0 else 1.0
+
+
+def quantize_scale(scale: float, tolerance: float = 0.05) -> float:
+    """Snap ``scale`` to a log-spaced bucket of relative width ``tolerance``.
+
+    Scales within one bucket of 1.0 snap to exactly 1.0 (no correction), so
+    a well-calibrated profile is never churned by estimator noise.
+    """
+    if scale <= 0.0:
+        return 1.0
+    q = math.log1p(max(tolerance, 1e-6))
+    return math.exp(round(math.log(scale) / q) * q)
+
+
+def corrected_profile(profile: ModuleProfile, scale: float) -> ModuleProfile:
+    """A copy of ``profile`` with every config duration scaled by ``scale``."""
+    if scale == 1.0:
+        return profile
+    return ModuleProfile(
+        profile.name,
+        tuple(
+            Config(c.batch, c.duration * scale, c.hardware, c.unit_price)
+            for c in profile.configs
+        ),
+    )
+
+
+def corrected_profiles(
+    profiles: Mapping[str, ModuleProfile],
+    scales: Mapping[str, float],
+) -> Mapping[str, ModuleProfile]:
+    """Apply per-module scales; modules absent from ``scales`` pass through.
+
+    Returns the input mapping object itself when every scale is 1.0, so
+    downstream identity/fingerprint caches see no change at all.
+    """
+    if all(scales.get(m, 1.0) == 1.0 for m in profiles):
+        return profiles
+    return {
+        m: corrected_profile(p, scales.get(m, 1.0)) for m, p in profiles.items()
+    }

@@ -27,6 +27,11 @@ Layers, ingress to silicon:
   live stages without dropping in-flight frames.  Selected via
   ``ServingEngine.run(pipeline=True, control=ControlLoopConfig(...))``;
   the per-epoch audit trail is returned as ``ServeResult.epochs``.
+* ``service_time`` — pluggable batch service durations: ``analytic``
+  (profiled constant, bit-exact default), ``trace`` (recorded samples,
+  deterministic replay), ``live`` (real executors timed per batch).
+  Selected via ``ServingEngine.run(service_time=...)``; with a control
+  loop, observed durations correct the profiles epochs replan against.
 * ``simulator`` — module-level Theorem-1 validation harness.
 * ``reference`` — the frozen seed loops (golden equivalence baselines).
 
@@ -76,25 +81,36 @@ from .frontend import (
 from .pipeline import FanoutSpec, PipelineConfig, PipelineResult
 from .replay import ModuleReplay, expand_fanout, replay_machine, replay_module
 from .reference import engine_run_reference, simulate_reference
+from .service_time import (
+    AnalyticServiceTime,
+    LiveServiceTime,
+    ServiceTimeSource,
+    TraceServiceTime,
+    resolve_service_time,
+)
 from .simulator import SimResult, simulate
 
 __all__ = [
     "ARRIVALS",
+    "AnalyticServiceTime",
     "ClosedLoopClients",
     "ControlLoopConfig",
     "ControlRuntime",
     "EpochRecord",
     "FanoutSpec",
     "FrontendConfig",
+    "LiveServiceTime",
     "ModuleReplay",
     "PipelineConfig",
     "PipelineResult",
     "ModuleStats",
     "QueueDepth",
     "ServeResult",
+    "ServiceTimeSource",
     "ServingEngine",
     "SimResult",
     "TokenBucket",
+    "TraceServiceTime",
     "engine_run_reference",
     "expand_fanout",
     "make_admission",
@@ -103,6 +119,7 @@ __all__ = [
     "poisson_arrivals",
     "replay_machine",
     "replay_module",
+    "resolve_service_time",
     "serving_cost",
     "simulate",
     "simulate_module_events",

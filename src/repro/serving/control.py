@@ -31,12 +31,13 @@ from __future__ import annotations
 
 import math
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Mapping, Sequence
 
 from ..core.dispatch import Machine, expand_machines
 from ..core.harpagon import Plan, Planner
 from ..core.profiles import ModuleProfile
+from ..profiling.measured import corrected_profiles, duration_scale, quantize_scale
 from .frontend.admission import AdmissionController
 from .pipeline.stages import StageUpdate
 
@@ -50,12 +51,40 @@ class ControlLoopConfig:
     extrapolates the windowed estimate's trend one epoch ahead (two
     half-window rates -> slope), so a diurnal ramp is provisioned for where
     the rate *will be* when the next plan is live, not where it was half a
-    window ago.  ``margin`` over-provisions on top (``target = est * (1 +
+    window ago.  ``attack`` adds a fast-attack term on top of the (noise-
+    damping, multi-interval) window: the estimate is floored at the trend
+    estimate over just the most recent interval, so a ramp that turns
+    *inside* the window (the post-trough climb a coarse epoch otherwise
+    reads as a lull) is caught at attack speed while falls still release
+    at the window's pace.  ``warmup`` fast-starts the epoch cadence: the
+    first replans fire at ``interval / 2^warmup, ..., interval / 2``
+    before the chain lands back on the regular grid, so an initial plan
+    provisioned off-rate (cold start against a ramp, a miscalibrated
+    profile) is repaired within a fraction of the first interval instead
+    of a full one — at coarse epochs the uncorrected first interval is
+    the dominant deadline-miss mode.  ``margin`` over-provisions on top (``target = est * (1 +
     margin)``) to absorb estimate noise and burn down backlog accumulated
     while under-provisioned.  ``tolerance`` / ``cost_guard`` are forwarded
     to `Planner.replan`.  ``floor`` bounds the estimate from below as a
     fraction of the initially provisioned frame rate, so a lull can never
     replan to a zero-machine cluster.
+
+    ``correct_profiles`` folds measured batch durations (a trace/live
+    `ServiceTimeSource` feeding :meth:`ControlRuntime.observe_service`)
+    back into the profiles each epoch replans against: per-module
+    measured/modeled duration scales, log-quantized at ``correction_tol``
+    so estimator wobble cannot churn the replan cache (see
+    `repro.profiling.measured`).
+
+    The ``relax_*`` knobs govern mid-epoch transient-aware deadline
+    relaxation (active only on the dummy-streaming ``timeout="budget"``
+    path with burst-aware deadlines): when the observed arrival rate falls
+    more than ``relax_tol`` below the rate the active plan provisioned,
+    stage flush deadlines are re-resolved with the collect rate scaled
+    down to the observed one (never below ``relax_floor``), so a stale
+    plan stops deadline-flushing near-empty padded batches while it waits
+    for the next replan epoch.  Checked every ``relax_every`` fraction of
+    an epoch; ``relax=False`` restores the always-flush behavior.
     """
 
     interval: float
@@ -63,9 +92,17 @@ class ControlLoopConfig:
     window: "float | None" = None
     margin: float = 0.1
     forecast: bool = True
+    attack: bool = True
+    warmup: int = 2
     tolerance: float = 0.02
     cost_guard: float = 0.01
     floor: float = 0.3
+    correct_profiles: bool = True
+    correction_tol: float = 0.05
+    relax: bool = True
+    relax_tol: float = 0.1
+    relax_floor: float = 0.3
+    relax_every: float = 0.25
 
     def __post_init__(self):
         if self.interval <= 0.0:
@@ -74,8 +111,16 @@ class ControlLoopConfig:
             raise ValueError("estimation window must be positive")
         if self.margin < 0.0:
             raise ValueError("margin must be >= 0")
+        if self.warmup < 0 or self.warmup > 8:
+            raise ValueError("warmup must be in [0, 8]")
         if not 0.0 < self.floor <= 1.0:
             raise ValueError("floor must be in (0, 1]")
+        if self.correction_tol <= 0.0:
+            raise ValueError("correction_tol must be positive")
+        if not 0.0 < self.relax_floor <= 1.0:
+            raise ValueError("relax_floor must be in (0, 1]")
+        if self.relax_every <= 0.0:
+            raise ValueError("relax_every must be positive")
 
 
 @dataclass(frozen=True)
@@ -93,6 +138,13 @@ class EpochRecord:
     machines_added: float = 0.0
     machines_drained: float = 0.0
     delta_summary: str = ""
+    # model-vs-measured service-time audit (0.0 / empty without a measuring
+    # ServiceTimeSource): mean relative |measured - modeled| over the
+    # epoch's started batches, modeled = the ACTIVE plan's config duration
+    duration_err: float = 0.0
+    # per-module duration scales (vs the ORIGINAL profiles) the epoch's
+    # replan ran under; only non-1.0 entries are recorded
+    corrections: Mapping[str, float] = field(default_factory=dict)
 
 
 def plan_e2e_hint(plan: Plan) -> float:
@@ -148,6 +200,7 @@ class ControlRuntime:
         timeout_of: Callable[[object, "list[Machine]", Plan], "float | None | dict"],
         dummies: bool = False,
         admission: "AdmissionController | None" = None,
+        relax: bool = False,
     ):
         if frame_rate <= 0.0:
             raise ValueError("frame_rate must be positive")
@@ -161,7 +214,28 @@ class ControlRuntime:
         self.timeout_of = timeout_of
         self.dummies = dummies
         self.admission = admission
+        # transient-aware deadline relaxation is an engine-side gate: it
+        # only makes sense on the dummy-streaming "budget"-deadline path
+        # whose deadlines assume the provisioned collect rate
+        self.relax_enabled = bool(relax) and cfg.relax
+        self._relax_scale = 1.0
+        # measured service durations (ServiceTimeSource observer feed):
+        # sliding per-module (original-modeled, measured) pairs for the
+        # correction estimator, plus per-epoch error accumulators against
+        # the ACTIVE plan's modeled durations
+        self._svc_win: dict[str, deque] = {
+            m: deque(maxlen=256) for m in wl.app.modules
+        }
+        self._orig_dur = {
+            (m, c.batch, c.hardware): c.duration
+            for m, p in profiles.items()
+            for c in p.configs
+        }
+        self._err_sum = 0.0
+        self._err_n = 0
+        self.scales: dict[str, float] = {}
         self._issues: deque[float] = deque()
+        self._warmup_sched: "deque[float] | None" = None
         self.history: list[EpochRecord] = [
             EpochRecord(
                 t=0.0,
@@ -179,6 +253,30 @@ class ControlRuntime:
     def interval(self) -> float:
         return self.cfg.interval
 
+    def next_epoch(self, t: float) -> float:
+        """Absolute time of the epoch following ``t`` (event-loop arming).
+
+        The first call anchors the fast-start ladder at ``t`` (the first
+        real arrival): with ``warmup=w`` the early epochs fire at
+        ``t + interval / 2^w, ..., t + interval / 2, t + interval`` —
+        geometric, so a cold-start misprovision is repaired within a
+        fraction of the first interval — and every later epoch returns to
+        the plain ``t + interval`` cadence.  Monotonic by construction:
+        ladder entries at or before ``t`` are skipped (the wedge-lapse
+        re-arm path can ask from an arbitrary later instant).
+        """
+        if self._warmup_sched is None:
+            self._warmup_sched = deque(
+                t + self.cfg.interval / (1 << (self.cfg.warmup - k))
+                for k in range(self.cfg.warmup + 1)
+            )
+        sched = self._warmup_sched
+        while sched and sched[0] <= t + 1e-12:
+            sched.popleft()
+        if sched:
+            return sched[0]
+        return t + self.cfg.interval
+
     @property
     def e2e_hint(self) -> float:
         """The live plan's modeled end-to-end latency (clients' backoff base)."""
@@ -186,6 +284,121 @@ class ControlRuntime:
 
     def observe(self, t: float) -> None:
         self._issues.append(t)
+
+    def observe_service(
+        self, module: str, machine: Machine, duration: float, t: float
+    ) -> None:
+        """One started batch's measured service duration (stage observer).
+
+        Two books are kept: the correction window pairs the measurement
+        with the ORIGINAL profile's duration for that (batch, hardware) —
+        scales must never compound across correction epochs — while the
+        epoch error accumulator pairs it with the LIVE machine's config
+        duration, i.e. what the active plan currently believes.
+        """
+        cfg_d = machine.config.duration
+        if cfg_d <= 0.0 or duration <= 0.0:
+            return
+        orig = self._orig_dur.get(
+            (module, machine.config.batch, machine.config.hardware), cfg_d
+        )
+        win = self._svc_win.get(module)
+        if win is not None:
+            win.append((orig, duration))
+        self._err_sum += abs(duration - cfg_d) / cfg_d
+        self._err_n += 1
+
+    # -- transient-aware deadline relaxation (mid-epoch ticks) ---------------
+    @property
+    def relax_interval(self) -> "float | None":
+        """Tick period for :meth:`on_tick`; None disables the tick chain."""
+        if not self.relax_enabled:
+            return None
+        return self.cfg.interval * self.cfg.relax_every
+
+    def on_tick(self, t: float) -> "float | None":
+        """Detect mid-epoch provisioned-rate staleness; returns the new
+        collect-rate scale to retime the stages with (None: unchanged).
+
+        The active plan provisioned ``history[-1].target`` frames/s; when
+        the recently observed rate (half-interval window) falls more than
+        ``relax_tol`` below it, budget deadlines derived from the
+        provisioned collect rate flush near-empty padded batches every
+        cycle — pure waste the next epoch would only repair after the
+        fact.  The returned scale relaxes those deadlines toward the
+        observed arrival quantum (`resolve_module_timeout(rate_scale=)`),
+        clamped at ``relax_floor``; a recovered rate scales back to 1.0.
+        """
+        cfg = self.cfg
+        window = cfg.interval * 0.5
+        window = min(window, t) if t > 0.0 else window
+        if window <= 0.0:
+            return None
+        count = 0
+        for x in reversed(self._issues):
+            if x < t - window:
+                break
+            count += 1
+        observed = (count / window) * (1.0 + cfg.margin)
+        provisioned = self.history[-1].target
+        if provisioned <= 0.0:
+            return None
+        scale = 1.0
+        if observed < provisioned * (1.0 - cfg.relax_tol):
+            scale = max(cfg.relax_floor, observed / provisioned)
+            # quantize so estimator wobble cannot churn flush re-arming
+            scale = max(cfg.relax_floor, round(scale / 0.05) * 0.05)
+        if abs(scale - self._relax_scale) < 1e-9:
+            return None
+        self._relax_scale = scale
+        return scale
+
+    def relax_timeout(
+        self, module: str, machines: "list[Machine]"
+    ) -> "float | None | dict":
+        """The stage's deadlines under the current relax scale."""
+        return self.timeout_of(
+            self.plan.schedules[module], machines, self.plan, self._relax_scale
+        )
+
+    def _trend_est(
+        self, t: float, window: float, *, k_down: float = 2.0, k_up: float = 0.0
+    ) -> float:
+        """Trend-extrapolated arrival-rate estimate over ``[t - window, t)``.
+
+        The window's two half-rates give a slope; extrapolating from the
+        recent half's center through the coming epoch provisions a ramp at
+        its arrival, not at its observation.  The slope is debiased by its
+        own counting noise before extrapolating — shrunk toward zero by
+        ``k`` standard deviations of the half-rate difference (Poisson:
+        ``sqrt(n1 + n2) / half^2``) — and the shrinkage is asymmetric.  A
+        falling slope is burst noise and genuine decay mixed, and
+        projecting the noise part forward under-provisions on a perfectly
+        steady rate (a quiet half-window reads as a crash, the replan
+        sheds machines, and the next burst lands on a shrunken cluster):
+        ``k_down`` shrinks falls hard.  A rising slope at worst
+        over-provisions one epoch, so ``k_up`` defaults to trusting it;
+        the short fast-attack window passes ``k_up=1`` because its halves
+        hold few arrivals and a raw noise spike there would churn the
+        plan upward at every other epoch.
+        """
+        half = window / 2.0
+        if half <= 0.0:
+            return 0.0
+        n2 = n1 = 0
+        for x in reversed(self._issues):
+            if x < t - window:
+                break
+            if x >= t - half:
+                n2 += 1
+            else:
+                n1 += 1
+        r2, r1 = n2 / half, n1 / half
+        slope = (r2 - r1) / half
+        k = k_up if slope >= 0.0 else k_down
+        sd = math.sqrt(max(n1 + n2, 1)) / (half * half)
+        mag = max(0.0, abs(slope) - k * sd)
+        return r2 + math.copysign(mag, slope) * (0.5 * half + self.cfg.interval)
 
     def on_epoch(self, t: float) -> "dict[str, StageUpdate] | None":
         """Estimate, replan, and emit the stage updates for epoch ``t``."""
@@ -210,22 +423,54 @@ class ControlRuntime:
             # slope; extrapolate from the recent half's center through the
             # coming epoch so a ramp is provisioned at its arrival, not at
             # its observation
-            half = window / 2.0
-            n2 = sum(1 for x in dq if x >= t - half)
-            r2 = n2 / half
-            r1 = (len(dq) - n2) / half
-            est = r2 + (r2 - r1) / half * (0.5 * half + cfg.interval)
+            est = self._trend_est(t, window)
+            if cfg.attack and window > cfg.interval:
+                # fast-attack: a multi-interval window damps noise, but it
+                # also averages away a ramp that *turns inside it* — after
+                # a diurnal trough the windowed estimate is still reading
+                # the lull while arrivals are already climbing, and the
+                # epoch replans to a stale-low target (the dominant
+                # deadline-miss mode at coarse epochs).  Re-estimate over
+                # just the most recent interval and take it when it beats
+                # the windowed estimate by more than the provisioning
+                # margin: rises are provisioned at attack speed, falls
+                # release at the window's slower pace, and the margin-wide
+                # hysteresis band keeps the short window's counting noise
+                # from churning the plan when the rate is steady
+                recent = self._trend_est(
+                    t, min(cfg.interval, window), k_up=1.0
+                )
+                if recent > est * (1.0 + cfg.margin):
+                    est = recent
         else:
             est = len(dq) / max(window, cfg.interval)
         est = max(est, cfg.floor * self.frame_rate0)
         target = est * (1.0 + cfg.margin)
         new_rates = {m: target * f for m, f in self.fanouts.items()}
+        # model-vs-measured audit for the closing epoch, then fold the
+        # observed durations into the profiles the replan runs against:
+        # per-module scales vs the ORIGINAL profiles, quantized so only a
+        # real calibration shift forces a repair
+        duration_err = self._err_sum / self._err_n if self._err_n else 0.0
+        self._err_sum, self._err_n = 0.0, 0
+        force: set[str] = set()
+        if cfg.correct_profiles:
+            for m, win in self._svc_win.items():
+                if not win:
+                    continue
+                s = quantize_scale(duration_scale(win), cfg.correction_tol)
+                if s != self.scales.get(m, 1.0):
+                    self.scales[m] = s
+                    force.add(m)
+        profiles = corrected_profiles(self.profiles, self.scales)
+        corrections = {m: s for m, s in self.scales.items() if s != 1.0}
         new_plan = self.planner.replan(
             self.plan,
             new_rates,
-            self.profiles,
+            profiles,
             tolerance=cfg.tolerance,
             cost_guard=cfg.cost_guard,
+            force=frozenset(force),
         )
         if not new_plan.feasible:
             # keep serving on the previous plan; the failed epoch is recorded
@@ -235,6 +480,8 @@ class ControlRuntime:
                     version=self.plan.version, cost=self.plan.cost,
                     feasible=False, swapped=False,
                     actions=dict(new_plan.provenance),
+                    duration_err=duration_err,
+                    corrections=corrections,
                 )
             )
             return None
@@ -270,6 +517,8 @@ class ControlRuntime:
                     d.machines_drained for d in delta.modules.values()
                 ),
                 delta_summary=delta.summary() if updates else "",
+                duration_err=duration_err,
+                corrections=corrections,
             )
         )
         return updates or None

@@ -61,7 +61,17 @@ from .events import simulate_module_events
 from .frontend import FrontendConfig, make_admission
 from .frontend.clients import closed_loop_ingress
 from .frontend.dummy import merge_phantoms, phantom_times
-from .replay import ModuleReplay, expand_fanout, replay_module, runs_to_assignment
+from .replay import (
+    ModuleReplay,
+    causal_order,
+    expand_fanout,
+    lexmax_fold,
+    lexmax_parents,
+    propagate_depth,
+    replay_module,
+    runs_to_assignment,
+)
+from .service_time import LiveServiceTime, ServiceTimeSource, resolve_service_time
 
 
 @dataclass
@@ -147,6 +157,7 @@ def resolve_module_timeout(
     *,
     dummies: bool = False,
     burst: "float | None" = None,
+    rate_scale: float = 1.0,
 ) -> "float | None | dict[int, float]":
     """Resolve the batch-collection deadline for one module schedule.
 
@@ -183,6 +194,15 @@ def resolve_module_timeout(
     by the quantum + floor slack) for flush stability — the same contract
     as ``PlannerOptions(burst_aware=True)`` on the WCL side.  Flag off
     (``burst=None``) keeps the exact PR-4 semantics, collapse included.
+
+    ``rate_scale`` (< 1.0) is the control plane's transient-aware deadline
+    relaxation (`ControlRuntime.on_tick`): when arrivals run below the
+    plan's provisioned rate mid-epoch, the burst-corrected deadlines are
+    re-resolved as if the collect rate were ``scale * C`` — the padded-fill
+    floor and the burst quantum both stretch by ``1 / scale`` toward the
+    *observed* arrival quantum, so a stale plan stops flushing near-empty
+    batches.  The default 1.0 is an exact no-op, and only the
+    dummy-streaming burst-aware branch consumes it.
     """
     if timeout is None or isinstance(timeout, (int, float)):
         return timeout
@@ -197,12 +217,12 @@ def resolve_module_timeout(
                     mm.mid: max(s.budget - mm.config.duration, 0.0)
                     for mm in machines
                 }
-            coll = sum(a.rate + a.dummy for a in s.allocs)
+            coll = sum(a.rate + a.dummy for a in s.allocs) * rate_scale
             return {
                 mm.mid: max(
                     s.budget - mm.config.duration,
                     _PAD_FILL * (mm.config.batch + 1.5) / max(coll, 1e-12),
-                ) + burst
+                ) + burst / rate_scale
                 for mm in machines
             }
         # floor at the real-rate fill time: dummy-padded plans assume the
@@ -260,6 +280,7 @@ class ServingEngine:
         offered_rate: float | None = None,
         pipeline: "bool | object" = False,
         control: "object | None" = None,
+        service_time: "str | ServiceTimeSource | None" = None,
     ) -> ServeResult:
         """Serve ``n_frames`` frames arriving at ``offered_rate`` (default:
         the provisioned ``frame_rate``) through the planned DAG.
@@ -284,6 +305,16 @@ class ServingEngine:
         stages.  The returned ``ServeResult.epochs`` carries the per-epoch
         audit trail.  With ``control=None`` the path is bit-identical to
         before the control plane existed.
+
+        ``service_time`` selects where batch service durations come from
+        (`repro.serving.service_time`): ``None`` / ``"analytic"`` is the
+        profiled constant (bit-exact default); a `TraceServiceTime` replays
+        recorded per-(module, batch) samples deterministically; ``"live"``
+        (or a `LiveServiceTime`) times the engine's real executors per
+        batch.  In pipeline mode real executors auto-wrap into a live
+        source, so ``run(pipeline=True)`` co-simulates against measured
+        step times; combined with ``control=`` the epochs replan against
+        observed durations (model-vs-measured error in each EpochRecord).
         """
         fe = frontend or FrontendConfig()
         wl: Workload = self.plan.workload
@@ -295,11 +326,13 @@ class ServingEngine:
                 "control= (epoch-based plan hot-swap) requires pipeline mode: "
                 "the flat path replays whole modules and cannot swap mid-run"
             )
+        src = resolve_service_time(service_time, self.executors)
         if pipeline:
             return self._run_pipeline(
                 n_frames, frame_rate, fe, ctrl,
                 arrivals=arrivals, seed=seed, timeout=timeout, tail=tail,
                 offered_rate=offered_rate, cfg=pipeline, control=control,
+                service_time=src,
             )
         if fe.clients is not None:
             warnings.warn(
@@ -325,7 +358,8 @@ class ServingEngine:
         else:
             shed_mask = np.zeros(n_frames, dtype=bool)
         result, _ = self._serve(
-            arrival, shed_mask, frame_rate, fe, timeout=timeout, tail=tail
+            arrival, shed_mask, frame_rate, fe, timeout=timeout, tail=tail,
+            service_time=src,
         )
         return result
 
@@ -391,6 +425,7 @@ class ServingEngine:
         offered_rate: float | None,
         cfg,
         control=None,
+        service_time: "ServiceTimeSource | None" = None,
     ) -> ServeResult:
         """Multi-module pipelined co-simulation (`repro.serving.pipeline`)."""
         from .control import ControlLoopConfig, ControlRuntime, plan_e2e_hint
@@ -401,11 +436,10 @@ class ServingEngine:
             cfg = PipelineConfig()
         if not isinstance(cfg, PipelineConfig):
             raise TypeError(f"pipeline= expects True or PipelineConfig, got {cfg!r}")
-        if self.executors:
-            raise NotImplementedError(
-                "pipeline mode is virtual-time only; real executors run on "
-                "the single-module event core"
-            )
+        if service_time is None and self.executors:
+            # real executors in pipeline mode: co-simulate against measured
+            # step times (timed per batch, steady-state cached per config)
+            service_time = LiveServiceTime(self.executors)
         wl: Workload = self.plan.workload
         topo = topo_sort(wl.app.modules, wl.app.edges)
         sources = [m for m in topo if not wl.app.parents(m)]
@@ -434,6 +468,7 @@ class ServingEngine:
                 fanout=stage_fanouts[m],
                 phantom_target=target,
                 queue_cap=cfg.queue_cap,
+                service_time=service_time,
             )
         rt = None
         if control is not None:
@@ -451,17 +486,30 @@ class ServingEngine:
                 self.plan,
                 control.profiles,
                 frame_rate,
-                timeout_of=lambda s_, machines_, plan_: resolve_module_timeout(
-                    s_, machines_, timeout, self.policy, dummies=fe.dummies,
-                    burst=(
-                        plan_burst(plan_, s_.module)
-                        if (fe.burst_deadline and fe.dummies)
-                        else None
-                    ),
+                timeout_of=lambda s_, machines_, plan_, rate_scale=1.0: (
+                    resolve_module_timeout(
+                        s_, machines_, timeout, self.policy, dummies=fe.dummies,
+                        burst=(
+                            plan_burst(plan_, s_.module)
+                            if (fe.burst_deadline and fe.dummies)
+                            else None
+                        ),
+                        rate_scale=rate_scale,
+                    )
                 ),
                 dummies=fe.dummies,
                 admission=ctrl,
+                # deadline relaxation applies to provisioned-collect-rate
+                # deadlines only: the dummy-padded "budget" path with the
+                # burst-aware corrections is exactly that regime
+                relax=(fe.dummies and fe.burst_deadline and timeout == "budget"),
             )
+            if service_time is not None:
+                # feed every started batch's measured duration to the
+                # control plane: epochs replan against corrected profiles
+                # and record the model-vs-measured error
+                for st in stages.values():
+                    st.service_obs = rt.observe_service
         e2e_hint = plan_e2e_hint(self.plan)
         pace = offered_rate if offered_rate is not None else frame_rate
         if ctrl is not None:
@@ -514,6 +562,7 @@ class ServingEngine:
         *,
         timeout: "float | str | None",
         tail: str,
+        service_time: "ServiceTimeSource | None" = None,
     ) -> tuple[ServeResult, np.ndarray]:
         """Replay the DAG over admitted frames; returns the result plus the
         per-frame e2e latency array (NaN for shed/dropped frames)."""
@@ -528,20 +577,57 @@ class ServingEngine:
         # frame a fanout < 1 module legitimately skipped, which the seed
         # semantics exclude from the statistics entirely
         lost = np.zeros(n_frames, dtype=bool)
+        # quiescence-depth tracking (causal tail order): end-of-stream tail
+        # flushes happen in the event loop's quiescence rounds, strictly
+        # after all normal completions — their backdated cascades must be
+        # *delivered* last at DAG joins even when their times are earlier.
+        # Only the timeout=None flush path produces tails; the dummy
+        # frontend's phantom merge assumes sorted streams, so the (untested)
+        # dummies+no-timeout combination keeps the legacy order.
+        track_depth = timeout is None and tail == "flush" and not fe.dummies
+        depth = (
+            {m: np.zeros(n_frames, dtype=np.int64) for m in wl.app.modules}
+            if track_depth
+            else {}
+        )
+        emit = (
+            {m: np.zeros(n_frames) for m in wl.app.modules}
+            if track_depth
+            else {}
+        )
+        tail_rounds: dict[str, int] = {}
+        anc = wl.app.ancestor_closure() if track_depth else {}
         for m in topo_sort(wl.app.modules, wl.app.edges):
             parents = wl.app.parents(m)
+            in_depth = in_emit = None
             if parents:
                 pf = np.stack([finish_at[p] for p in parents])
                 ready = np.maximum(arrival, pf.max(axis=0))
                 drop = (pf <= 0.0).any(axis=0)
+                if track_depth:
+                    in_depth, in_emit = lexmax_parents(
+                        [depth[p] for p in parents],
+                        [emit[p] for p in parents],
+                    )
             else:
                 ready = arrival
                 drop = shed_mask
             fanout = wl.rates[m] / frame_rate
-            self._run_module(
+            anc_round = (
+                max((tail_rounds.get(a, 0) for a in anc.get(m, ())), default=0)
+                if track_depth
+                else 0
+            )
+            tail_rounds[m] = self._run_module(
                 m, ready, drop, fanout, finish_at[m], stats[m], lost,
                 timeout=timeout, tail=tail, dummies=fe.dummies,
                 burst_deadline=fe.burst_deadline,
+                service_time=service_time,
+                in_depth=in_depth,
+                in_emit=in_emit,
+                out_depth=depth[m] if track_depth else None,
+                out_emit=emit[m] if track_depth else None,
+                anc_round=anc_round,
             )
         sinks = [m for m in wl.app.modules if not wl.app.children(m)]
         sf = np.stack([finish_at[s] for s in sinks])
@@ -584,17 +670,25 @@ class ServingEngine:
         tail: str,
         dummies: bool = False,
         burst_deadline: bool = False,
-    ) -> None:
+        service_time: "ServiceTimeSource | None" = None,
+        in_depth: "np.ndarray | None" = None,
+        in_emit: "np.ndarray | None" = None,
+        out_depth: "np.ndarray | None" = None,
+        out_emit: "np.ndarray | None" = None,
+        anc_round: int = 0,
+    ) -> int:
         sched = self.plan.schedules[m]
         machines = expand_machines(list(sched.allocs))
-        # expand frames into module-level request instances by fanout,
-        # in ready order, skipping frames dropped upstream
-        order = np.argsort(ready, kind="stable")
+        # expand frames into module-level request instances by fanout, in
+        # causal order — (quiescence depth, emit, id); plain stable
+        # ready-sort when no upstream tail cascades exist — skipping frames
+        # dropped upstream
+        order = causal_order(ready, in_depth, in_emit)
         frames = order[~drop[order]]
         instances = expand_fanout(frames, fanout)
         n = instances.size
         if n == 0:
-            return
+            return 0
         ready_inst = ready[instances]
         phantom = np.zeros(n, dtype=bool)
         ready_all = ready_inst
@@ -611,7 +705,24 @@ class ServingEngine:
             m, machines, timeout, dummies=dummies, burst_deadline=burst_deadline
         )
         ex = self.executors.get(m)
-        if ex is None:
+        if service_time is not None and service_time.kind != "analytic":
+            # trace/live durations: the vectorized kernel assumes the
+            # profiled constant, so route through the event core's
+            # service-time hook (`MachineCore.start`'s duration callable)
+            def _sourced(machine: Machine, group: int) -> float:
+                return service_time.duration(m, machine, group)
+
+            finish, batches = simulate_module_events(
+                machines,
+                ready_all,
+                runs_to_assignment(runs, n_all),
+                timeout=w,
+                tail=tail,
+                executor=_sourced,
+                phantom=phantom,
+            )
+            rep = ModuleReplay(finish, runs_to_assignment(runs, n_all), batches, phantom)
+        elif ex is None:
             rep = replay_module(
                 machines, ready_all, runs, timeout=w, tail=tail, phantom=phantom
             )
@@ -634,6 +745,28 @@ class ServingEngine:
         # phantoms fill batches but never enter the statistics; the stable
         # merge preserved real-request order, so slicing by the mask aligns
         # the finish times back with ``ready_inst`` / ``instances``
+        tail_round = 0
+        if out_depth is not None:
+            # thread the quiescence depth through service: completions
+            # inherit their machine's running-max arrival depth, this
+            # module's own flushed tail (if any) fires one round past the
+            # deepest ancestor flush, and each frame's resolve key is the
+            # lexicographic (depth, finish) max over its instances — the
+            # processing instant of its last completion event
+            inst_depth = (
+                in_depth[instances]
+                if in_depth is not None
+                else np.zeros(n, dtype=np.int64)
+            )
+            out_inst, tail_round = propagate_depth(
+                inst_depth, rep.assignment, rep.finish, machines, w, tail,
+                anc_round,
+            )
+            done_i = ~np.isnan(rep.finish)
+            lexmax_fold(
+                instances[done_i], out_inst[done_i], rep.finish[done_i],
+                out_depth, out_emit,
+            )
         finish_real = rep.finish[~phantom]
         done = ~np.isnan(finish_real)
         stats.batches += rep.n_batches
@@ -648,3 +781,4 @@ class ServingEngine:
             had = np.zeros(finish_frame.size, dtype=bool)
             had[instances] = True
             lost |= had & (finish_frame <= 0.0)
+        return tail_round

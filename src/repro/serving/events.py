@@ -69,8 +69,8 @@ class MachineCore:
     """
 
     __slots__ = (
-        "machine", "timeout", "buf", "token", "armed", "queue", "free_at",
-        "busy", "draining",
+        "machine", "timeout", "buf", "token", "armed", "armed_at", "queue",
+        "free_at", "busy", "draining",
     )
 
     def __init__(self, machine: Machine, timeout: "float | None" = None):
@@ -79,6 +79,7 @@ class MachineCore:
         self.buf: list = []          # open formation buffer
         self.token = 0               # bumped on close; voids stale flush events
         self.armed = False           # a flush deadline exists for the open batch
+        self.armed_at = 0.0          # when it was armed (deadline re-anchor)
         self.queue: deque = deque()  # closed batches: (batch_ready, members)
         self.free_at = 0.0
         self.busy = False
@@ -95,6 +96,7 @@ class MachineCore:
         self.buf.append(member)
         if is_real and not self.armed and self.timeout is not None:
             self.armed = True
+            self.armed_at = t
             return t + self.timeout
         return None
 
@@ -108,6 +110,20 @@ class MachineCore:
         self.buf = []
         self.token += 1
         self.armed = False
+
+    def retime(self, timeout: "float | None") -> "float | None":
+        """Change the open batch's flush deadline in place (control-plane
+        deadline relaxation).  The token bump voids any pending flush event;
+        returns the new deadline re-anchored at ``armed_at`` for the owner
+        to push (None: nothing armed, or deadlines now disabled)."""
+        self.timeout = timeout
+        if not self.armed:
+            return None
+        self.token += 1
+        if timeout is None:
+            self.armed = False
+            return None
+        return self.armed_at + timeout
 
     def discard(self) -> list:
         """Drop the open buffer (end-of-stream leftovers); returns it."""
@@ -148,7 +164,8 @@ def simulate_module_events(
 ) -> tuple[np.ndarray, dict[int, int]]:
     """Simulate one module; returns ``(finish, batches_per_machine)``.
 
-    ``ready`` is the sorted per-request ready time; ``assignment[i]`` the
+    ``ready`` is the per-request ready time in causal order (plain sorted
+    when no upstream tail cascades are present); ``assignment[i]`` the
     machine id serving request ``i``.  ``timeout`` may be a single deadline
     or a per-machine-id mapping.  ``finish[i]`` is the absolute completion
     time (``np.nan`` for dropped tail requests).  ``executor`` (when given)
@@ -230,7 +247,10 @@ def simulate_module_events(
                     # flush at the last REAL member's arrival: the frontend
                     # stops injecting phantoms once the stream ends, so
                     # trailing phantoms must not inflate real tail latency
-                    t_last = float(ready[max(r for r in buf if real[r])])
+                    # max over VALUES, not stream positions: under causal
+                    # order a backdated cascade member may sit after the
+                    # time-max one (identical for sorted streams)
+                    t_last = max(float(ready[r]) for r in buf if real[r])
                     close_batch(mid, batch_ready=t_last, now=t_last)
                 elif buf:
                     core.discard()  # drop (finish stays NaN)

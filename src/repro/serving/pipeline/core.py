@@ -160,13 +160,10 @@ def run_pipeline(
 
         if fastpath.eligible(dag, stages):
             # the whole run is one quiescent segment: delegate to the
-            # vectorized flat kernel (the PR-3 equivalence theorem, cached).
-            # None = a backdated end-of-stream tail flush would interleave
-            # a join's arrival stream (rare; see fastpath docstring): fall
-            # through to the causal event loop, which is authoritative
-            res = fastpath.run_flat_segment(dag, stages, n_frames, issue, tail)
-            if res is not None:
-                return res
+            # vectorized flat kernel (the PR-3 equivalence theorem, cached;
+            # streams run in the event loop's causal order, backdated
+            # end-of-stream tails included — see fastpath docstring)
+            return fastpath.run_flat_segment(dag, stages, n_frames, issue, tail)
     rng = np.random.default_rng(seed)
     topo = dag.topo_order()
     torder = {m: i for i, m in enumerate(topo)}
@@ -449,9 +446,17 @@ def run_pipeline(
                 ("phantom", m, st.phantom_token),
             )
     epoch_armed = False
+    relax_armed = False
+    relax_every = control.relax_interval if control is not None else None
     if control is not None:
-        push(t_first + control.interval, _K_EPOCH, None, None)
+        push(control.next_epoch(t_first), _K_EPOCH, None, None)
         epoch_armed = True
+        if relax_every is not None:
+            # mid-epoch staleness ticks: transient-aware deadline relaxation
+            # (same event kind as epochs — a swap at the same instant must
+            # observe everything — distinguished by payload)
+            push(t_first + relax_every, _K_EPOCH, None, ("relax",))
+            relax_armed = True
 
     # -- main loop -----------------------------------------------------------
     t_now = 0.0
@@ -504,16 +509,15 @@ def run_pipeline(
                 acted |= drain_parked(st, t_now)
             if not acted and not heap:
                 break
-            if (
-                acted
-                and control is not None
-                and not epoch_armed
-                and issued < n_frames
-            ):
+            if acted and control is not None and issued < n_frames:
                 # the wedge is resolved and the run continues: re-arm the
-                # epoch chain that lapsed to let this flush happen
-                push(t_now + control.interval, _K_EPOCH, None, None)
-                epoch_armed = True
+                # epoch/relax chains that lapsed to let this flush happen
+                if not epoch_armed:
+                    push(control.next_epoch(t_now), _K_EPOCH, None, None)
+                    epoch_armed = True
+                if relax_every is not None and not relax_armed:
+                    push(t_now + relax_every, _K_EPOCH, None, ("relax",))
+                    relax_armed = True
             continue
         t, kind, _s, stage_name, payload = heap.pop()
         t_now = max(t_now, t)
@@ -627,6 +631,22 @@ def run_pipeline(
                 st.close(mid, batch_ready=t, now=t, push=push)
                 drain_parked(st, t)
         else:  # _K_EPOCH: control-plane boundary (after same-instant events)
+            if payload is not None and payload[0] == "relax":
+                # mid-epoch staleness tick: when arrivals run well below the
+                # active plan's provisioned rate, re-resolve every stage's
+                # flush deadlines with the collect rate scaled to observed
+                # (open batches keep their members and arming instants)
+                relax_armed = False
+                if issued >= n_frames:
+                    continue  # the tick chain retires with the stream
+                if control.on_tick(t) is not None:
+                    for m in topo:
+                        st = stages[m]
+                        st.retime(control.relax_timeout(m, st.machines), t, push)
+                if heap:
+                    push(t + relax_every, _K_EPOCH, None, ("relax",))
+                    relax_armed = True
+                continue
             epoch_armed = False
             if issued >= n_frames:
                 continue  # stream fully issued: the epoch chain retires,
@@ -640,7 +660,7 @@ def run_pipeline(
                     # deliveries may proceed immediately
                     drain_parked(stages[m], t)
             if heap:
-                push(t + control.interval, _K_EPOCH, None, None)
+                push(control.next_epoch(t), _K_EPOCH, None, None)
                 epoch_armed = True
             # an otherwise-empty heap means the run is wedged on a partial
             # batch that only the quiescence flush (which requires an empty

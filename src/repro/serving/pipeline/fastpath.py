@@ -22,24 +22,20 @@ evaluates in their operation order).  Every eligibility condition above is
 run-constant, so the quiescent segment is always the *entire* run and the
 event-loop re-entry point is the end of stream.
 
-**The causal boundary.**  One construct is acausal in the flat replay:
-the end-of-stream tail flush with ``timeout=None`` closes a partial batch
-at its last member's ready time — *backdating* service into the past,
-because the flat engine knows module-by-module that the stream has ended.
-The event loop only learns that once everything else has drained, so its
-tail flushes (and their downstream cascades) happen strictly after all
-normal events.  The two orders coincide exactly when every
-quiescence-derived arrival sorts after the normal arrivals it joins — true
-for almost every stream length, but a backdated tail on one branch of a
-join CAN slot earlier than a sibling's normal completions.  The fast path
-tracks a conservative *quiescence depth* per frame (0 = normal, k = fed by
-a k-deep tail-flush cascade) and demands the depth sequence be
-non-decreasing along every module's flat-order arrival stream — the exact
-condition under which the event loop's ``[normal, then tail-cascade]``
-delivery order equals the flat stable ready-sort.  On violation it
-returns ``None`` untouched (per-stage stats are committed only on
-success) and `core.run_pipeline` falls through to the macro-event general
-loop, whose causal semantics are the ground truth.
+**The causal order.**  One construct needs care in the flat replay: the
+end-of-stream tail flush with ``timeout=None`` closes a partial batch at
+its last member's ready time — *backdating* service into the past, because
+the flat engine knows module-by-module that the stream has ended.  The
+event loop only learns that once everything else has drained, so its tail
+flushes (and their downstream cascades) happen strictly after all normal
+events, round by round.  The fast path tracks a *quiescence depth* per
+frame (0 = normal, r = produced in/fed by the r-th tail-flush round) and
+orders every module's arrival stream by ``(depth, ready, frame id)``
+(`replay.causal_order`) — exactly the event loop's delivery order, even
+when a backdated tail on one branch of a join carries an earlier time
+than a sibling's normal completions.  The flat kernel itself is causal
+(`repro.serving.replay` handles non-monotone ready within a causal
+stream), so the fast path never needs to bail to the event loop.
 
 Speed: ~20-40x over the event-by-event loop at 10^4-10^6 frames on the
 suite apps (see ``benchmarks.run --only pipeline_speed``), which is what
@@ -54,7 +50,15 @@ import numpy as np
 
 from ...core.dag import AppDAG
 from ...core.dispatch import dispatch_runs
-from ..replay import fanout_counts, replay_module, runs_to_assignment
+from ..replay import (
+    causal_order,
+    fanout_counts,
+    lexmax_fold,
+    lexmax_parents,
+    propagate_depth,
+    replay_module,
+    runs_to_assignment,
+)
 from .fanout import AccumulatorFanout
 from .result import FrameTable, PipelineResult
 from .stages import ModuleStage
@@ -62,11 +66,17 @@ from .stages import ModuleStage
 
 def eligible(dag: AppDAG, stages: Mapping[str, ModuleStage]) -> bool:
     """Stage-side fast-path eligibility (caller already checked that the
-    run is open-loop with no admission and no control plane)."""
+    run is open-loop with no admission and no control plane).
+
+    A non-analytic service-time source (trace samples, live executor
+    timing) is stateful per batch start, so those runs stay on the event
+    loop; an analytic source is the profiled constant the kernel already
+    uses."""
     return all(
         st.queue_cap is None
         and st.phantom_target <= 0.0
         and isinstance(st.fanout, AccumulatorFanout)
+        and getattr(st.service_time, "kind", "analytic") == "analytic"
         for st in stages.values()
     )
 
@@ -77,20 +87,16 @@ def run_flat_segment(
     n_frames: int,
     issue: np.ndarray,
     tail: str,
-) -> "PipelineResult | None":
+) -> PipelineResult:
     """Replay one quiescent segment (the whole eligible run) vectorized.
 
     Module-by-module in topological order — the flat engine's schedule,
     which the PR-3 ordering argument showed delivers every frame to every
     stage at the same instant and in the same arrival order as the global
-    event loop.  Per-frame records land in the same `FrameTable` columns
+    event loop (streams in causal ``(depth, ready, id)`` order; see module
+    docstring).  Per-frame records land in the same `FrameTable` columns
     the event loop fills, so the returned `PipelineResult` is
     indistinguishable from the general path's.
-
-    Returns ``None`` — with no observable side effects — when the
-    quiescence-depth monotonicity check detects a backdated tail flush
-    interleaving a join's arrival stream (see module docstring): the
-    caller then runs the event loop, whose causal order is authoritative.
     """
     topo = dag.topo_order()
     torder = {m: i for i, m in enumerate(topo)}
@@ -111,10 +117,14 @@ def run_flat_segment(
     # ancestors-drained stage per round, so round r's completions (and
     # their fill-cascades) all causally precede round r+1's
     depth = {m: np.zeros(n_frames, dtype=np.int64) for m in topo}
-    # the round in which m's own acausal tail (timeout None, flushed
+    # the processing instant of f's resolve at m — equal to the finish value
+    # in the normal phase, but a cascade resolve can be backdated below a
+    # sibling branch's finish while still processing after it (the join's
+    # delivery order key, alongside depth; see `replay.causal_order`)
+    emit = {m: np.zeros(n_frames) for m in topo}
+    # the round in which m's own backdated tail (timeout None, flushed
     # partial) fires: one past the last round an ancestor still held work
     tail_round: dict[str, int] = {}
-    stats_buf: list = []  # committed only on success: bail must be effect-free
 
     for m in topo:
         st = stages[m]
@@ -122,25 +132,21 @@ def run_flat_segment(
             pf = np.stack([ft.finish[p] for p in parents[m]])
             voided = np.isnan(pf).any(axis=0)
             ready = pf.max(axis=0)  # NaN only where voided (excluded below)
-            in_depth = np.max(
-                np.stack([depth[p] for p in parents[m]]), axis=0
+            in_depth, in_emit = lexmax_parents(
+                [depth[p] for p in parents[m]],
+                [emit[p] for p in parents[m]],
             )
         else:
             voided = np.zeros(n_frames, dtype=bool)
             ready = ft.issue
             in_depth = np.zeros(n_frames, dtype=np.int64)
+            in_emit = ft.issue
         bad[m] |= voided
-        # stage arrival order: time-ordered, frame id breaking ties — the
-        # order the event loop's (t, seq) heap + (topo, frame) same-instant
-        # delivery sort realizes
-        order = np.argsort(ready, kind="stable")
+        # stage arrival order: causal — (quiescence depth, emit, frame id),
+        # the order the event loop's (t, seq) heap + (topo, frame)
+        # same-instant delivery + after-drain tail rounds realize
+        order = causal_order(ready, in_depth, in_emit)
         alive = order[~voided[order]]
-        # causal-boundary check: the event loop delivers normal arrivals in
-        # ready order and tail-cascade arrivals strictly after, by depth —
-        # equal to this flat stream iff depth is monotone along it
-        d_seq = in_depth[alive]
-        if d_seq.size and np.any(np.diff(d_seq) < 0):
-            return None
         counts = fanout_counts(alive.size, st.fanout.phi)
         taken = counts > 0
         entered = alive[taken]
@@ -169,58 +175,25 @@ def run_flat_segment(
         ft.lost |= lost_here
         bad[m] |= lost_here
 
-        # propagate quiescence depth: FIFO service serializes a machine's
-        # stream, so a completion inherits the running max of its machine's
-        # arrival rounds; an end-of-stream flushed partial tail (timeout
-        # None) fires in this stage's own quiescence round — one past the
-        # last round any ancestor still held work
-        inst_depth = in_depth[instances]
+        # propagate quiescence depth through service so downstream joins
+        # can re-establish the causal order (`replay.propagate_depth`);
+        # each frame's resolve key is the lexicographic (depth, finish)
+        # max over its completed instances
         assignment = runs_to_assignment(runs, instances.size)
-        sizes_by_mid = np.bincount(
-            assignment, minlength=max(mm.mid for mm in machines) + 1
+        out_inst, tail_round[m] = propagate_depth(
+            in_depth[instances], assignment, rep.finish, machines, timeout,
+            tail,
+            max((tail_round.get(a, 0) for a in ancestors[m]), default=0),
         )
-        has_tail = tail == "flush" and any(
-            timeout[mm.mid] is None
-            and int(sizes_by_mid[mm.mid]) % mm.config.batch
-            for mm in machines
+        lexmax_fold(
+            instances[done], out_inst[done], rep.finish[done],
+            depth[m], emit[m],
         )
-        tail_round[m] = (
-            1 + max(
-                (tail_round[a] for a in ancestors[m] if tail_round.get(a)),
-                default=0,
-            )
-            if has_tail
-            else 0
-        )
-        sorder = np.argsort(assignment, kind="stable")
-        sorted_mid = assignment[sorder]
-        out_inst = np.zeros(instances.size, dtype=np.int64)
-        for mm in machines:
-            lo = int(np.searchsorted(sorted_mid, mm.mid, side="left"))
-            hi = int(np.searchsorted(sorted_mid, mm.mid, side="right"))
-            if lo == hi:
-                continue
-            idx = sorder[lo:hi]
-            serial = np.maximum.accumulate(inst_depth[idx])
-            n_m = idx.size
-            rem = n_m % mm.config.batch
-            if rem and timeout[mm.mid] is None and tail == "flush":
-                serial[n_m - rem:] = np.maximum(serial[n_m - rem:], tail_round[m])
-            out_inst[idx] = serial
-        dep_m = depth[m]
-        np.maximum.at(dep_m, instances, out_inst)
 
         ss = st.stats
-        n_done = int(done.sum())
-        stats_buf.append((
-            ss, rep.n_batches, instances.size - n_done,
-            (rep.finish[done] - ready_inst[done]).tolist(),
-        ))
-
-    for ss, n_batches, n_dropped, lats in stats_buf:
-        ss.batches += n_batches
-        ss.dropped += n_dropped
-        ss.latencies.extend(lats)
+        ss.batches += rep.n_batches
+        ss.dropped += instances.size - int(done.sum())
+        ss.latencies.extend((rep.finish[done] - ready_inst[done]).tolist())
 
     sink_finish = np.stack([ft.finish[s] for s in sinks])
     ok = ~np.isnan(sink_finish).any(axis=0)

@@ -214,6 +214,8 @@ class ModuleStage:
         fanout=None,
         phantom_target: float = 0.0,
         queue_cap: "int | None" = None,
+        service_time=None,
+        service_obs: "Callable | None" = None,
     ):
         if queue_cap is not None and queue_cap < 1:
             raise ValueError("queue_cap must be >= 1 (or None for unbounded)")
@@ -248,6 +250,14 @@ class ModuleStage:
         # so a swap can restart the chain without double-injecting
         self.phantom_token = 0
         self.queue_cap = queue_cap
+        # batch service durations: None takes the profiled constant (the
+        # bit-exact default); a `serving.service_time.ServiceTimeSource`
+        # supplies trace/live wall-clock durations at every batch start.
+        # ``service_obs(module, machine, duration, now)`` — when set — sees
+        # each started batch's actual duration (the control plane's
+        # model-vs-measured estimator feed).
+        self.service_time = service_time
+        self.service_obs = service_obs
         self.backlog = 0  # instances delivered but not yet started service
         # deliveries parked by backpressure: (instance, blocker) where
         # blocker is the (stage, mid) whose outputs they are, or None for
@@ -373,6 +383,37 @@ class ModuleStage:
                     ("phantom", self.name, self.phantom_token),
                 )
 
+    def retime(
+        self,
+        timeout: "float | None | Mapping[int, float]",
+        now: float,
+        push: Callable,
+    ) -> None:
+        """Swap every active core's flush deadline in place (the control
+        plane's mid-epoch deadline relaxation).
+
+        Unlike :meth:`apply_update` this touches no machines and closes no
+        batches: each core's open formation buffer keeps its members and its
+        arming instant, only the deadline is re-anchored — a pending flush
+        dies on the bumped token and the replacement fires at
+        ``max(armed_at + new_timeout, now)`` (an already-overdue deadline
+        under the *longer* new timeout flushes immediately, never in the
+        past).  Draining cores are left alone: their open batch was already
+        closed at the drain instant.
+        """
+        if isinstance(timeout, Mapping):
+            t_of = {m.mid: timeout.get(m.mid) for m in self.machines}
+        else:
+            t_of = {m.mid: timeout for m in self.machines}
+        for machine in self.machines:
+            mid = machine.mid
+            core = self.cores[mid]
+            if core.draining:
+                continue
+            deadline = core.retime(t_of.get(mid))
+            if deadline is not None:
+                push(max(deadline, now), _K_FLUSH, self.name, (mid, core.token))
+
     # -- formation / service -------------------------------------------------
     def deliver(self, inst: Instance, now: float, push: Callable) -> None:
         """Hand one instance to the dispatcher at time ``now``.
@@ -416,6 +457,7 @@ class ModuleStage:
                     take = k
                 if not core.armed and core.timeout is not None:
                     core.armed = True
+                    core.armed_at = now
                     push(now + core.timeout, _K_FLUSH, self.name, (mid, core.token))
                 buf.extend(Instance(frame, now) for _ in range(take))
                 k -= take
@@ -430,10 +472,27 @@ class ModuleStage:
     def start_next(self, mid: int, now: float, push: Callable) -> bool:
         """Start the next queued batch on ``mid`` (unless backpressured)."""
         core = self.cores[mid]
-        started = core.start(now, lambda members: core.machine.config.duration)
+        src, obs = self.service_time, self.service_obs
+        if src is None and obs is None:
+            started = core.start(now, lambda members: core.machine.config.duration)
+        else:
+            drawn: list[float] = []
+
+            def _dur(members) -> float:
+                d = (
+                    core.machine.config.duration
+                    if src is None
+                    else src.duration(self.name, core.machine, len(members))
+                )
+                drawn.append(d)
+                return d
+
+            started = core.start(now, _dur)
         if started is None:
             return False
         end, members = started
+        if obs is not None and drawn:
+            obs(self.name, core.machine, drawn[0], now)
         self.stats.batches += 1
         self.backlog -= len(members)
         self.in_service[mid] = members

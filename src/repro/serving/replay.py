@@ -17,9 +17,27 @@ seconds.  The two key identities:
   (`repro.serving.pipeline.fastpath`) delegate to this kernel without
   perturbing a single bit.
 
+**Causal arrival order.**  The pipelined event loop is the authoritative
+semantics: end-of-stream tail flushes (``timeout=None``) happen only once
+everything upstream has drained, so their downstream cascades deliver
+*strictly after* all normal completions — round by round — even though the
+flush itself backdates ``batch_ready`` to the tail's last real arrival.  A
+module's replay stream must therefore be ordered by ``(quiescence depth,
+ready, frame id)`` (:func:`causal_order`), not by ready time alone: at a DAG
+join a backdated tail completion on one branch may carry an *earlier* time
+than a sibling's normal completions, yet it still arrives *later*.  The
+stream handed to :func:`replay_machine` is non-decreasing in time *within*
+each depth level only; batch closure uses the causally-last member's ready
+(what the event core's ``now`` is at close), and the end-of-stream tail
+flushes at the max ready over its members (the event loop's quiescence
+``t_last``).  :func:`propagate_depth` carries the depth bookkeeping through
+a module's service so downstream joins can re-establish the order.
+
 Property tests (tests/test_event_core.py) pin this kernel to the event core,
 and golden tests pin both to the frozen seed loops in
-`repro.serving.reference` on uniform arrivals.
+`repro.serving.reference` on uniform arrivals (the causal tail order
+deviates from the seed loops only on the rare join corner the seed got
+wrong — see tests/test_golden_equivalence.py).
 """
 from __future__ import annotations
 
@@ -70,6 +88,139 @@ def runs_to_assignment(runs: Sequence[tuple[int, int]], n: int) -> np.ndarray:
     return out
 
 
+def causal_order(
+    ready: np.ndarray,
+    depth: np.ndarray | None = None,
+    emit: np.ndarray | None = None,
+) -> np.ndarray:
+    """Delivery order of the pipelined event loop at a DAG join.
+
+    Normal completions (depth 0) deliver in time order; end-of-stream
+    tail-flush cascades (depth ``r`` >= 1) deliver strictly after every
+    normal event, round by round, each round processing in event-time
+    order.  A join frame's delivery *instant* (``emit``) is the processing
+    time of its last-resolving parent — the lexicographic ``(depth, time)``
+    max over parent completions — which can be EARLIER than its ``ready``
+    value (the max parent finish) when a backdated cascade completion joins
+    a normal completion from the sibling branch.  So arrivals order by
+    ``(quiescence depth, emit, frame id)``; with no positive depth
+    ``emit == ready`` everywhere and this is exactly the stable ready-sort
+    the flat engine always used.
+    """
+    if depth is None or not depth.any():
+        return np.argsort(ready, kind="stable")
+    # lexsort: last key is primary; stable, so equal (depth, emit) pairs
+    # keep ascending id — matching the event loop's same-instant delivery
+    return np.lexsort((ready if emit is None else emit, depth))
+
+
+def lexmax_fold(
+    frames: np.ndarray,
+    depth_i: np.ndarray,
+    emit_i: np.ndarray,
+    out_depth: np.ndarray,
+    out_emit: np.ndarray,
+) -> None:
+    """Per-frame resolve key at one module: the lexicographic
+    ``(depth, emit)`` max over the frame's completed instances — a frame
+    resolves when its last instance's completion event processes, which is
+    the deepest round's latest event, not necessarily the max finish value.
+    Writes into the per-frame output columns in place.
+    """
+    if frames.size == 0:
+        return
+    ordk = np.lexsort((emit_i, depth_i, frames))
+    fs = frames[ordk]
+    last = np.flatnonzero(np.r_[fs[1:] != fs[:-1], True])
+    sel = ordk[last]
+    out_depth[frames[sel]] = depth_i[sel]
+    out_emit[frames[sel]] = emit_i[sel]
+
+
+def lexmax_parents(
+    depths: Sequence[np.ndarray], emits: Sequence[np.ndarray]
+) -> tuple[np.ndarray, np.ndarray]:
+    """A join frame's delivery key: the lexicographic ``(depth, emit)`` max
+    over its parents' per-frame resolve keys (it is delivered when the last
+    parent resolves in the event loop's processing order)."""
+    d = depths[0].copy()
+    e = emits[0].copy()
+    for dp, ep in zip(depths[1:], emits[1:]):
+        take = (dp > d) | ((dp == d) & (ep > e))
+        d = np.where(take, dp, d)
+        e = np.where(take, ep, e)
+    return d, e
+
+
+def propagate_depth(
+    in_depth: np.ndarray,
+    assignment: np.ndarray,
+    finish: np.ndarray,
+    machines: Sequence[Machine],
+    timeout: "float | None | Mapping[int, float]",
+    tail: str,
+    anc_round: int,
+) -> tuple[np.ndarray, int]:
+    """Quiescence-depth bookkeeping through one module's service.
+
+    A batch is ONE completion event: every member inherits the batch's
+    depth — the max over member arrival depths (a round-``r`` cascade
+    arrival that fills a batch carries its depth-0 members into round
+    ``r`` with it).  FIFO service serializes a machine's batches, so depth
+    also accumulates batch-to-batch (a batch cannot complete before
+    earlier-queued work that includes a round-``r`` member).  Batch
+    boundaries are recovered from ``finish``: the FIFO chain is strictly
+    increasing per machine, so members share a batch iff they share a
+    finish value.  A machine whose stream leaves a flushed partial tail
+    (``timeout=None``, ``tail="flush"``) holds it until the module's own
+    quiescence round — one past the deepest round any ancestor flushes in
+    (``anc_round``) — and the tail's completions carry that depth
+    downstream.
+
+    Returns ``(out_depth, tail_round)`` where ``out_depth`` is per-instance
+    (aligned with ``assignment``) and ``tail_round`` is the module's own
+    flush round (0 when no machine flushes a partial tail).
+    """
+    out = in_depth.astype(np.int64, copy=True)
+    if not machines:
+        return out, 0
+
+    def _w(mid: int):
+        return timeout.get(mid) if isinstance(timeout, Mapping) else timeout
+
+    order = np.argsort(assignment, kind="stable")
+    sorted_mid = assignment[order]
+    has_tail = False
+    spans: list[tuple[Machine, np.ndarray]] = []
+    for mm in machines:
+        lo = int(np.searchsorted(sorted_mid, mm.mid, side="left"))
+        hi = int(np.searchsorted(sorted_mid, mm.mid, side="right"))
+        if lo == hi:
+            continue
+        idx = order[lo:hi]
+        spans.append((mm, idx))
+        if (
+            tail == "flush"
+            and _w(mm.mid) is None
+            and idx.size % mm.config.batch != 0
+        ):
+            has_tail = True
+    tail_round = anc_round + 1 if has_tail else 0
+    if tail_round == 0 and not in_depth.any():
+        return out, 0  # fully normal-phase module: nothing to propagate
+    for mm, idx in spans:
+        d = in_depth[idx]
+        f = finish[idx]
+        gid = np.cumsum(np.r_[True, f[1:] != f[:-1]]) - 1
+        gmax = np.zeros(int(gid[-1]) + 1, dtype=np.int64)
+        np.maximum.at(gmax, gid, d)
+        rem = idx.size % mm.config.batch
+        if rem and tail == "flush" and _w(mm.mid) is None:
+            gmax[-1] = max(gmax[-1], tail_round)
+        out[idx] = np.maximum.accumulate(gmax)[gid]
+    return out, tail_round
+
+
 def _batch_bounds(
     ready: np.ndarray,
     batch: int,
@@ -102,13 +253,21 @@ def _batch_bounds(
         last = np.minimum(np.arange(1, ng + 1) * batch, n) - 1
         sizes = np.diff(np.concatenate([[0], last + 1]))
         g_ready = ready[last]
-        if flush_tail and has_phantom:
-            # the end-of-stream flush happens at the tail's last REAL arrival
-            # (the frontend stops injecting once the stream ends) — trailing
-            # phantoms must not inflate real tail latency
-            tail_real = np.flatnonzero(~phantom[n_full * batch:])
+        if flush_tail:
+            # the end-of-stream flush happens at the tail's last arrival in
+            # TIME, not in stream position: the quiescence flush reads
+            # ``t_last = max(member ready)``, and under causal order a
+            # backdated cascade member may sit after the time-max one.  For
+            # sorted streams the max IS the last element — bit-identical.
             g_ready = g_ready.astype(np.float64, copy=True)
-            g_ready[-1] = ready[n_full * batch + tail_real[-1]]
+            if has_phantom:
+                # ... and only REAL arrivals count (the frontend stops
+                # injecting once the stream ends) — trailing phantoms must
+                # not inflate real tail latency
+                tail_real = np.flatnonzero(~phantom[n_full * batch:])
+                g_ready[-1] = ready[n_full * batch + tail_real].max()
+            else:
+                g_ready[-1] = ready[n_full * batch:].max()
         return sizes, g_ready
     if has_phantom:
         # greedy scan with real-opener deadlines (phantom streams are rare
@@ -183,7 +342,9 @@ def replay_machine(
 ) -> tuple[np.ndarray, int]:
     """Replay one machine; returns ``(finish, n_batches)``.
 
-    ``ready`` must be sorted.  ``finish[i]`` is the absolute completion time
+    ``ready`` must be in causal order (sorted by time within each quiescence
+    depth level — plain sorted when no tail cascades are present; see the
+    module docstring).  ``finish[i]`` is the absolute completion time
     of request ``i`` (NaN when the tail is dropped).  ``phantom`` marks
     frontend dummy requests (see `_batch_bounds` for their semantics).
     """

@@ -251,6 +251,29 @@ class TestHotSwap:
         assert idle.epochs is not None and len(idle.epochs) == 1  # t=0 record
         assert not any(e.swapped for e in idle.epochs)
 
+    def test_warmup_fast_start_cadence(self):
+        """warmup=w fires the first replans at interval/2^w, ..., interval/2
+        before landing back on the regular grid — a cold-start misprovision
+        is repaired within a fraction of the first interval."""
+        _, plan = suite_plan("traffic", 100.0, 2.0)
+        eng = ServingEngine(plan)
+        res = eng.run(
+            1200, 100.0, arrivals="uniform", pipeline=True,
+            control=_control(4.0, warmup=2),
+        )
+        ts = [e.t for e in res.epochs]
+        # t=0 record, then the ladder 1, 2, 4 and the grid 8
+        assert ts[:5] == pytest.approx([0.0, 1.0, 2.0, 4.0, 8.0], abs=0.02)
+        plain = eng.run(
+            1200, 100.0, arrivals="uniform", pipeline=True,
+            control=_control(4.0, warmup=0),
+        )
+        assert [e.t for e in plain.epochs][:3] == pytest.approx(
+            [0.0, 4.0, 8.0], abs=0.02
+        )
+        with pytest.raises(ValueError, match="warmup"):
+            ControlLoopConfig(interval=1.0, warmup=-1)
+
     def test_epoch_records_are_auditable(self):
         _, plan = suite_plan("pose", 60.0, 3.0)
         res = ServingEngine(plan).run(
