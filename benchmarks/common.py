@@ -1,9 +1,11 @@
 """Shared benchmark plumbing: workload suite, planner set, CSV emission."""
 from __future__ import annotations
 
+import json
 import math
 import sys
 import time
+from pathlib import Path
 
 sys.path.insert(0, "src")
 
@@ -60,3 +62,36 @@ def timed(fn, *args, repeat: int = 3):
         out = fn(*args)
         best = min(best, time.perf_counter() - t0)
     return out, best * 1e6
+
+
+# BENCH_serving.json schema: v2 adds the version field itself, merge-write
+# semantics (a partial `--only` run updates its rows in place instead of
+# clobbering the rest), and deterministic name-sorted row order
+SCHEMA_VERSION = 2
+
+
+def write_bench_json(path: str, rows: "list[dict]") -> None:
+    """Merge ``rows`` into the benchmark JSON at ``path``, deterministically.
+
+    Rows are keyed by ``name``: an existing file's rows are kept unless this
+    run re-emitted them, and the union is written sorted by name — so
+    repeated partial runs converge to the same bytes regardless of which
+    subset ran last, and diffs show only rows whose numbers moved.
+    """
+    p = Path(path)
+    merged: dict[str, dict] = {}
+    if p.exists():
+        try:
+            old = json.loads(p.read_text())
+        except (OSError, ValueError):
+            old = {}
+        for r in old.get("benches", []):
+            if isinstance(r, dict) and "name" in r:
+                merged[r["name"]] = r
+    for r in rows:
+        merged[r["name"]] = r
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "benches": [merged[k] for k in sorted(merged)],
+    }
+    p.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")

@@ -246,7 +246,14 @@ def bench_shed_sweep(n: int) -> None:
     with MMPP arrivals at 1.0x / 1.3x the provisioned rate and compare the
     frontend policies.  Without admission the PR-1 queues (and p99) grow with
     the run length; token-bucket / queue-depth shedding bounds p99 at the
-    price of an explicit, reported shed rate."""
+    price of an explicit, reported shed rate.
+
+    A second leg re-runs the 1.3x overload point through the pipelined
+    co-simulation with SLO-miss forensics attached
+    (`ServeResult.miss_report`): every missed or shed frame classified
+    into exactly one cause, so the policy comparison also reports *what
+    kind* of miss each admission policy trades into (`shed_causes_*`
+    rows, conservation-checked)."""
     wls = workload_suite(max(60, min(n, 120)))
     fes = (
         ("none", FrontendConfig(dummies=True)),
@@ -256,6 +263,7 @@ def bench_shed_sweep(n: int) -> None:
     loads = (1.0, 1.3)
     acc = {(a, l): ([], [], []) for a, _ in fes for l in loads}  # att, p99, shed
     planned = 0
+    forensic: list = []  # first few (plan, frame_rate) for the causes leg
     t0 = time.perf_counter()
     for wl in wls:
         frame_rate = wl.rates[wl.app.modules[0]] / FANOUT[wl.app.name][wl.app.modules[0]]
@@ -263,6 +271,8 @@ def bench_shed_sweep(n: int) -> None:
         if not plan.feasible:
             continue
         planned += 1
+        if len(forensic) < 10:
+            forensic.append((plan, frame_rate))
         eng = ServingEngine(plan)
         for name, fe in fes:
             for load in loads:
@@ -293,6 +303,54 @@ def bench_shed_sweep(n: int) -> None:
                 shed_rate=round(finite_mean(sheds), 4),
                 workloads=planned,
             )
+
+    # -- miss-cause forensics leg (1.3x overload, pipelined co-simulation)
+    cause_acc: dict[str, dict[str, int]] = {name: {} for name, _ in fes}
+    totals = {name: [0, 0] for name, _ in fes}  # [misses, offered]
+    t0 = time.perf_counter()
+    for plan, frame_rate in forensic:
+        eng = ServingEngine(plan)
+        for name, fe in fes:
+            res = eng.run(
+                600, frame_rate, arrivals="mmpp", seed=0,
+                timeout="budget", frontend=fe,
+                offered_rate=1.3 * frame_rate, pipeline=True,
+            )
+            rep = res.miss_report()
+            if not rep.conserved:
+                print(
+                    f"# FAILURE: miss-cause conservation violated for "
+                    f"{plan.workload.app.name}/{name}: {rep.counts} vs "
+                    f"{rep.offered} offered, {rep.completed_in_slo} in SLO",
+                    file=sys.stderr,
+                )
+                raise SystemExit(1)
+            for k, v in rep.counts.items():
+                cause_acc[name][k] = cause_acc[name].get(k, 0) + v
+            totals[name][0] += rep.total
+            totals[name][1] += rep.offered
+    us = (time.perf_counter() - t0) * 1e6 / max(1, len(forensic))
+    for name, _ in fes:
+        counts = cause_acc[name]
+        misses, offered = totals[name]
+        dominant = (
+            max(counts.items(), key=lambda kv: (kv[1], kv[0]))[0]
+            if counts
+            else "none"
+        )
+        emit(
+            f"shed_causes_{name}",
+            us,
+            f"dominant={dominant}|misses={misses}/{offered}"
+            f"|workloads={len(forensic)}|load=1.3x",
+            admission=name,
+            load=1.3,
+            dominant=dominant,
+            misses=misses,
+            offered=offered,
+            causes={k: counts[k] for k in sorted(counts)},
+            workloads=len(forensic),
+        )
 
 
 def bench_pipeline_sweep(n: int) -> None:
@@ -505,9 +563,20 @@ def bench_pipeline_speed(n: int) -> None:
     collapse surface) reference-vs-default and gates on agreement alone:
     that path stays on the event loop, so there is no speed target, but a
     divergence between the two drivers is exactly the regression the plain
-    leg cannot see."""
+    leg cannot see.
+
+    A third leg re-times the fast path with sampled observability attached
+    (``ObservabilityConfig(sample=0.1)``): tracing must stay bit-exact and
+    — under ``--smoke``, a hard gate — inside a 10% overhead envelope,
+    because the telemetry hooks are column-level on the fast path and
+    guarded single branches on the event loop.  Smoke mode also exports a
+    Perfetto trace from a small diurnal control-plane run
+    (``trace_smoke.json``, the CI artifact) and fails if the export is not
+    loadable non-empty JSON."""
     import numpy as np
 
+    from repro.serving import ControlLoopConfig, ObservabilityConfig
+    from repro.serving.arrivals import trace_arrivals
     from repro.serving.pipeline import PipelineConfig
     from repro.workloads.apps import app_by_name, make_workload
 
@@ -609,6 +678,75 @@ def bench_pipeline_speed(n: int) -> None:
             file=sys.stderr,
         )
         raise SystemExit(1)
+
+    # observability overhead leg: sampled tracing on the same plain-path
+    # run — must stay bit-exact and (smoke gate) within 10% of untraced
+    traced, us_obs = common.timed(
+        lambda: eng.run(
+            n_frames, rate, arrivals="poisson", pipeline=True,
+            observability=ObservabilityConfig(sample=0.1),
+        ),
+        repeat=3,
+    )
+    agree_t = bool(
+        np.array_equal(fast.pipeline.e2e, traced.pipeline.e2e, equal_nan=True)
+        and all(
+            np.array_equal(
+                fast.pipeline.finish[m], traced.pipeline.finish[m],
+                equal_nan=True,
+            )
+            for m in fast.pipeline.modules
+        )
+    )
+    overhead = us_obs / us_fast
+    emit(
+        "pipeline_speed_traced",
+        us_obs,
+        f"traced={us_obs / 1e6:.3f}s|overhead={overhead:.3f}x"
+        f"|agree={agree_t}|sample=0.1|gate<=1.10x(smoke)",
+        traced_s=round(us_obs / 1e6, 4),
+        overhead=round(overhead, 3),
+        agree=agree_t,
+        n_frames=n_frames,
+    )
+    if SMOKE and (not agree_t or overhead > 1.10):
+        print(
+            f"# SMOKE FAILURE: sampled tracing overhead {overhead:.3f}x "
+            f"> 1.10x or result disagreement (agree={agree_t})",
+            file=sys.stderr,
+        )
+        raise SystemExit(1)
+
+    if SMOKE:
+        # Perfetto artifact for CI: a small diurnal control-plane run with
+        # full tracing, exported as trace_smoke.json — the gate is only
+        # that the export loads as non-empty trace-event JSON
+        n_t = 3_000
+        period = n_t / rate
+        arr = trace_arrivals(n_t, rate, seed=0, period=period)
+        res_t = eng.run(
+            n_t, rate, arrivals=arr, timeout="budget",
+            frontend=FrontendConfig(dummies=True, burst_deadline=True),
+            pipeline=True,
+            control=ControlLoopConfig(
+                interval=period / 6, profiles=PROFILES, margin=0.25
+            ),
+            observability=True,
+        )
+        path = res_t.trace.export("trace_smoke.json")
+        with open(path) as f:
+            doc = json.load(f)
+        if not doc.get("traceEvents"):
+            print(
+                "# SMOKE FAILURE: trace_smoke.json has no traceEvents",
+                file=sys.stderr,
+            )
+            raise SystemExit(1)
+        print(
+            f"# wrote {len(doc['traceEvents'])} Perfetto trace events to "
+            f"{path} ({len(res_t.epochs)} control epochs)",
+            file=sys.stderr,
+        )
 
 
 def bench_wallclock_gap(n: int) -> None:
@@ -804,8 +942,8 @@ BENCHES = {
 
 # serving-subsystem rows tracked across PRs by `--json` (BENCH_serving.json)
 _SERVING_PREFIXES = (
-    "replay_", "slo_sweep_", "shed_sweep_", "pipeline_sweep_", "diurnal_",
-    "pipeline_speed", "planner_speed", "wallclock_gap_",
+    "replay_", "slo_sweep_", "shed_sweep_", "shed_causes_", "pipeline_sweep_",
+    "diurnal_", "pipeline_speed", "planner_speed", "wallclock_gap_",
 )
 
 # --smoke: CI-sized inputs + hard regression gates (see bench_replay_speed)
@@ -870,10 +1008,15 @@ def main() -> None:
             r for r in common.RECORDS if r["name"].startswith(_SERVING_PREFIXES)
         ]
         if rows:
-            with open(args.json, "w") as f:
-                json.dump({"benches": rows}, f, indent=2)
-                f.write("\n")
-            print(f"# wrote {len(rows)} serving rows to {args.json}", file=sys.stderr)
+            # merge-by-name into the tracked file: partial `--only` runs
+            # update their rows in place, the union stays name-sorted
+            # (`common.write_bench_json`, schema v2)
+            common.write_bench_json(args.json, rows)
+            print(
+                f"# merged {len(rows)} serving rows into {args.json} "
+                f"(schema v{common.SCHEMA_VERSION})",
+                file=sys.stderr,
+            )
         else:
             # don't clobber a tracked trajectory file with an empty record
             print(

@@ -12,6 +12,10 @@ event simulation at full scale.
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --real \
       --pipeline --epoch 2.0          # pipelined co-sim against measured
                                       # step times + epoch audit/replan
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+      --pipeline --epoch 2.0 --arrivals diurnal --trace trace.json
+                                      # observability on: per-epoch metrics,
+                                      # SLO-miss forensics, Perfetto trace
 """
 from __future__ import annotations
 
@@ -28,6 +32,7 @@ from ..core.harpagon import Planner
 from ..models import Model
 from ..profiling import arch_profile
 from ..serving import ControlLoopConfig, ServingEngine
+from ..serving.arrivals import trace_arrivals
 
 
 def main() -> None:
@@ -49,6 +54,19 @@ def main() -> None:
         help="control-loop epoch interval in seconds (0 = control off); "
         "with --real each epoch audits modeled vs measured service time "
         "and replans against the corrected profiles",
+    )
+    ap.add_argument(
+        "--arrivals", default="uniform",
+        choices=["uniform", "poisson", "mmpp", "diurnal"],
+        help="arrival process (diurnal = sinusoidal day/night trace whose "
+        "period spans the run — the control plane's natural stressor)",
+    )
+    ap.add_argument(
+        "--trace", nargs="?", const="trace.json", default=None, metavar="PATH",
+        help="enable the observability layer: print the per-epoch metrics "
+        "table and the SLO-miss forensics report, and export a Chrome/"
+        "Perfetto trace-event JSON to PATH (default trace.json) — load it "
+        "at https://ui.perfetto.dev",
     )
     args = ap.parse_args()
     if args.epoch and not args.pipeline:
@@ -92,12 +110,23 @@ def main() -> None:
         if args.epoch
         else None
     )
+    if args.arrivals == "diurnal":
+        # one full day/night cycle across the run: the rate swings around
+        # the provisioned one, which is what gives the control plane (and
+        # the miss forensics' epoch attribution) something to chase
+        arrivals = trace_arrivals(
+            args.requests, args.rate, seed=0, period=args.requests / args.rate
+        )
+    else:
+        arrivals = args.arrivals
     res = engine.run(
         args.requests,
         args.rate,
+        arrivals=arrivals,
         pipeline=args.pipeline,
         control=control,
         service_time="live" if (args.real and args.pipeline) else None,
+        observability=args.trace is not None,
     )
     print(
         f"served {len(res.e2e_latencies)} requests: SLO attainment "
@@ -120,6 +149,18 @@ def main() -> None:
             print(
                 f"  epoch t={e.t:8.3f}s target={e.target:8.1f}/s "
                 f"cost={e.cost:7.1f} duration_err={e.duration_err:.3f}{corr}"
+            )
+    if args.trace is not None:
+        if res.metrics is not None and res.metrics.rows:
+            print(res.metrics.table())
+        if res.pipeline is not None:
+            print(res.miss_report().table())
+        if res.trace is not None:
+            path = res.trace.export(args.trace)
+            n_ev = len(res.trace.events())
+            print(
+                f"wrote {n_ev} trace events to {path} "
+                f"(load at https://ui.perfetto.dev)"
             )
 
 

@@ -32,6 +32,13 @@ Layers, ingress to silicon:
   deterministic replay), ``live`` (real executors timed per batch).
   Selected via ``ServingEngine.run(service_time=...)``; with a control
   loop, observed durations correct the profiles epochs replan against.
+* ``observability`` — the passive telemetry layer: a structured trace
+  recorder (ring-buffered, deterministically sampled, Perfetto-exportable),
+  a per-epoch metrics registry (occupancy / dummy fill / stalls /
+  utilization per module), and SLO-miss forensics (every missed or shed
+  frame classified into exactly one cause, conservation-checked).
+  Selected via ``ServingEngine.run(observability=True)`` (or an
+  ``ObservabilityConfig``); results are bit-identical with it on or off.
 * ``simulator`` — module-level Theorem-1 validation harness.
 * ``reference`` — the frozen seed loops (golden equivalence baselines).
 
@@ -78,6 +85,15 @@ from .frontend import (
     TokenBucket,
     make_admission,
 )
+from .observability import (
+    MISS_CAUSES,
+    MetricsSnapshot,
+    MissReport,
+    Observability,
+    ObservabilityConfig,
+    TraceRecorder,
+    classify_misses,
+)
 from .pipeline import FanoutSpec, PipelineConfig, PipelineResult
 from .replay import ModuleReplay, expand_fanout, replay_machine, replay_module
 from .reference import engine_run_reference, simulate_reference
@@ -100,7 +116,12 @@ __all__ = [
     "FanoutSpec",
     "FrontendConfig",
     "LiveServiceTime",
+    "MISS_CAUSES",
+    "MetricsSnapshot",
+    "MissReport",
     "ModuleReplay",
+    "Observability",
+    "ObservabilityConfig",
     "PipelineConfig",
     "PipelineResult",
     "ModuleStats",
@@ -110,7 +131,9 @@ __all__ = [
     "ServingEngine",
     "SimResult",
     "TokenBucket",
+    "TraceRecorder",
     "TraceServiceTime",
+    "classify_misses",
     "engine_run_reference",
     "expand_fanout",
     "make_admission",

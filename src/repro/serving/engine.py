@@ -61,6 +61,7 @@ from .events import simulate_module_events
 from .frontend import FrontendConfig, make_admission
 from .frontend.clients import closed_loop_ingress
 from .frontend.dummy import merge_phantoms, phantom_times
+from .observability import Observability
 from .replay import (
     ModuleReplay,
     causal_order,
@@ -96,6 +97,8 @@ class ServeResult:
     attempts: int = 0  # closed-loop issue attempts incl. retries (0 = open loop)
     pipeline: "object | None" = None  # PipelineResult when run(pipeline=...)
     epochs: "list | None" = None      # EpochRecords when run(control=...)
+    metrics: "object | None" = None   # MetricsSnapshot when run(observability=...)
+    trace: "object | None" = None     # TraceRecorder when tracing was enabled
 
     @property
     def offered(self) -> int:
@@ -117,6 +120,20 @@ class ServeResult:
         if not self.e2e_latencies:
             return 0.0
         return float(np.quantile(np.asarray(self.e2e_latencies), 0.99))
+
+    def miss_report(self, slo: "float | None" = None):
+        """SLO-miss forensics (`observability.forensics.MissReport`): every
+        missed or shed frame classified into exactly one cause, conservation
+        checked against ``offered - completed-in-SLO``.  Needs the per-frame
+        record, so pipeline-mode runs only; the control plane's epoch audit
+        trail (when one ran) refines the classification."""
+        if self.pipeline is None:
+            raise ValueError(
+                "miss_report needs the per-frame record: run(pipeline=True)"
+            )
+        return self.pipeline.miss_report(
+            self.slo if slo is None else slo, self.epochs
+        )
 
 
 def plan_burst(plan: Plan, m: str) -> float:
@@ -281,6 +298,7 @@ class ServingEngine:
         pipeline: "bool | object" = False,
         control: "object | None" = None,
         service_time: "str | ServiceTimeSource | None" = None,
+        observability: "bool | object | None" = None,
     ) -> ServeResult:
         """Serve ``n_frames`` frames arriving at ``offered_rate`` (default:
         the provisioned ``frame_rate``) through the planned DAG.
@@ -315,8 +333,16 @@ class ServingEngine:
         source, so ``run(pipeline=True)`` co-simulates against measured
         step times; combined with ``control=`` the epochs replan against
         observed durations (model-vs-measured error in each EpochRecord).
+
+        ``observability`` (``True``, an `ObservabilityConfig`, or a prebuilt
+        `Observability`) attaches the passive telemetry layer: a structured
+        trace recorder (Perfetto-exportable) and a per-epoch metrics
+        registry, returned as ``ServeResult.trace`` / ``.metrics``.  The
+        sink is write-only — results are bit-identical with it on, off, or
+        sampled.  Off (``None``, the default) costs nothing.
         """
         fe = frontend or FrontendConfig()
+        obs = Observability.make(observability)
         wl: Workload = self.plan.workload
         ctrl = make_admission(fe.admission, wl.app.name, frame_rate)
         if offered_rate is not None and offered_rate <= 0:
@@ -332,7 +358,7 @@ class ServingEngine:
                 n_frames, frame_rate, fe, ctrl,
                 arrivals=arrivals, seed=seed, timeout=timeout, tail=tail,
                 offered_rate=offered_rate, cfg=pipeline, control=control,
-                service_time=src,
+                service_time=src, obs=obs,
             )
         if fe.clients is not None:
             warnings.warn(
@@ -354,13 +380,27 @@ class ServingEngine:
         )
         if ctrl is not None:
             ctrl.reset()
+            ctrl.obs = obs  # flat path: ingress sheds land in the telemetry
             shed_mask = ctrl.shed_stream(arrival)
         else:
             shed_mask = np.zeros(n_frames, dtype=bool)
-        result, _ = self._serve(
+        result, lat = self._serve(
             arrival, shed_mask, frame_rate, fe, timeout=timeout, tail=tail,
-            service_time=src,
+            service_time=src, obs=obs,
         )
+        if obs is not None:
+            fin = arrival + lat
+            t_end = (
+                float(np.nanmax(fin))
+                if np.isfinite(fin).any()
+                else (float(arrival.max()) if arrival.size else 0.0)
+            )
+            machines_of = {
+                m: len(expand_machines(list(s.allocs)))
+                for m, s in self.plan.schedules.items()
+            }
+            result.metrics = obs.finalize(t_end, machines_of)
+            result.trace = obs.trace
         return result
 
     def _run_closed_loop(
@@ -426,6 +466,7 @@ class ServingEngine:
         cfg,
         control=None,
         service_time: "ServiceTimeSource | None" = None,
+        obs: "Observability | None" = None,
     ) -> ServeResult:
         """Multi-module pipelined co-simulation (`repro.serving.pipeline`)."""
         from .control import ControlLoopConfig, ControlRuntime, plan_e2e_hint
@@ -524,14 +565,15 @@ class ServingEngine:
             res = run_pipeline(
                 wl.app, stages, n_frames,
                 clients=fe.clients, pace=pace, admission=ctrl,
-                tail=tail, seed=seed, control=rt, e2e_hint=e2e_hint, **perf,
+                tail=tail, seed=seed, control=rt, e2e_hint=e2e_hint,
+                obs=obs, **perf,
             )
         else:
             issue = make_arrivals(arrivals, n_frames, pace, seed=seed)
             res = run_pipeline(
                 wl.app, stages, n_frames,
                 issue=issue, admission=ctrl, tail=tail, seed=seed,
-                control=rt, e2e_hint=e2e_hint, **perf,
+                control=rt, e2e_hint=e2e_hint, obs=obs, **perf,
             )
         stats = {}
         for m in topo:
@@ -542,7 +584,7 @@ class ServingEngine:
                 dropped=ss.dropped,
                 phantom=ss.phantom,
             )
-        return ServeResult(
+        out = ServeResult(
             res.e2e[res.completed].tolist(),
             stats,
             wl.slo,
@@ -552,6 +594,18 @@ class ServingEngine:
             pipeline=res,
             epochs=rt.history if rt is not None else None,
         )
+        if obs is not None:
+            t_end = 0.0
+            for m in topo:
+                col = res.finish[m]
+                v = col[~np.isnan(col)]
+                if v.size:
+                    t_end = max(t_end, float(v.max()))
+            out.metrics = obs.finalize(
+                t_end, {m: len(stages[m].machines) for m in topo}
+            )
+            out.trace = obs.trace
+        return out
 
     def _serve(
         self,
@@ -563,6 +617,7 @@ class ServingEngine:
         timeout: "float | str | None",
         tail: str,
         service_time: "ServiceTimeSource | None" = None,
+        obs: "Observability | None" = None,
     ) -> tuple[ServeResult, np.ndarray]:
         """Replay the DAG over admitted frames; returns the result plus the
         per-frame e2e latency array (NaN for shed/dropped frames)."""
@@ -622,7 +677,7 @@ class ServingEngine:
                 m, ready, drop, fanout, finish_at[m], stats[m], lost,
                 timeout=timeout, tail=tail, dummies=fe.dummies,
                 burst_deadline=fe.burst_deadline,
-                service_time=service_time,
+                service_time=service_time, obs=obs,
                 in_depth=in_depth,
                 in_emit=in_emit,
                 out_depth=depth[m] if track_depth else None,
@@ -671,6 +726,7 @@ class ServingEngine:
         dummies: bool = False,
         burst_deadline: bool = False,
         service_time: "ServiceTimeSource | None" = None,
+        obs: "Observability | None" = None,
         in_depth: "np.ndarray | None" = None,
         in_emit: "np.ndarray | None" = None,
         out_depth: "np.ndarray | None" = None,
@@ -705,6 +761,18 @@ class ServingEngine:
             m, machines, timeout, dummies=dummies, burst_deadline=burst_deadline
         )
         ex = self.executors.get(m)
+        hook = None
+        if obs is not None:
+            # per-batch telemetry feed for the event-core legs: exact spans
+            # (measured durations included) via `events.simulate_module_events`'s
+            # passive on_batch observer; the vectorized leg below reports
+            # column-level tallies from `ModuleReplay.batches` instead
+            def hook(machine: Machine, start: float, end: float, rids) -> None:
+                obs.batch_start(
+                    m, machine.mid, start, end - start, len(rids),
+                    machine.config.batch,
+                    sum(1 for r in rids if phantom[r]),
+                )
         if service_time is not None and service_time.kind != "analytic":
             # trace/live durations: the vectorized kernel assumes the
             # profiled constant, so route through the event core's
@@ -720,12 +788,29 @@ class ServingEngine:
                 tail=tail,
                 executor=_sourced,
                 phantom=phantom,
+                on_batch=hook,
             )
             rep = ModuleReplay(finish, runs_to_assignment(runs, n_all), batches, phantom)
         elif ex is None:
             rep = replay_module(
                 machines, ready_all, runs, timeout=w, tail=tail, phantom=phantom
             )
+            if obs is not None:
+                done_all = ~np.isnan(rep.finish)
+                by_mid = {mm.mid: mm.config for mm in machines}
+                obs.bulk_module(
+                    m,
+                    batches=rep.n_batches,
+                    members=int(done_all.sum()),
+                    phantoms=int((phantom & done_all).sum()),
+                    slots=sum(
+                        k * by_mid[mid].batch for mid, k in rep.batches.items()
+                    ),
+                    busy=sum(
+                        k * by_mid[mid].duration
+                        for mid, k in rep.batches.items()
+                    ),
+                )
         else:
             def _measured(machine: Machine, _group: int) -> float:
                 t0 = time.perf_counter()
@@ -740,6 +825,7 @@ class ServingEngine:
                 tail=tail,
                 executor=_measured,
                 phantom=phantom,
+                on_batch=hook,
             )
             rep = ModuleReplay(finish, runs_to_assignment(runs, n_all), batches, phantom)
         # phantoms fill batches but never enter the statistics; the stable

@@ -161,6 +161,7 @@ def simulate_module_events(
     tail: str = "flush",
     executor: Callable[[Machine, int], float] | None = None,
     phantom: np.ndarray | None = None,
+    on_batch: "Callable[[Machine, float, float, list], None] | None" = None,
 ) -> tuple[np.ndarray, dict[int, int]]:
     """Simulate one module; returns ``(finish, batches_per_machine)``.
 
@@ -177,6 +178,10 @@ def simulate_module_events(
     a flush deadline is armed only when a *real* request lands in the
     formation buffer, and a leftover buffer holding only phantoms is
     discarded at end of stream instead of flushed.
+
+    ``on_batch`` (when given) is a passive observer called at every batch
+    start with ``(machine, start, end, members)`` — the observability
+    layer's per-batch span feed; it never influences the simulation.
     """
     if tail not in ("flush", "drop"):
         raise ValueError(f"unknown tail policy {tail!r}")
@@ -195,17 +200,32 @@ def simulate_module_events(
     def start_next(mid: int, now: float) -> None:
         core = cores[mid]
         m = core.machine
-        dur = (
-            (lambda rids: executor(m, len(rids)))
-            if executor is not None
-            else (lambda rids: m.config.duration)
-        )
+        if on_batch is None:
+            dur = (
+                (lambda rids: executor(m, len(rids)))
+                if executor is not None
+                else (lambda rids: m.config.duration)
+            )
+        else:
+            drawn: list[float] = []
+
+            def dur(rids, _d=drawn) -> float:
+                d = (
+                    executor(m, len(rids))
+                    if executor is not None
+                    else m.config.duration
+                )
+                _d.append(d)
+                return d
+
         started = core.start(now, dur)
         if started is None:
             return
         end, rids = started
         batches[mid] += 1
         finish[rids] = end
+        if on_batch is not None:
+            on_batch(m, end - drawn[0], end, rids)
         heapq.heappush(heap, (end, _FREE, mid, 0))
 
     def close_batch(mid: int, batch_ready: float, now: float) -> None:

@@ -76,6 +76,12 @@ class AdmissionController:
                 raise ValueError("queue-depth needs drain_rate>0 and depth>=1")
         else:
             raise TypeError(f"unknown admission policy {policy!r}")
+        # passive telemetry sink (`observability.Observability`): the flat
+        # path wires it before shed_stream so ingress sheds land in the
+        # trace/metrics; the pipelined loop emits its own shed events at
+        # frame resolution instead, so it leaves this unset.  Survives
+        # reset() — a reset clears admission state, not the observer.
+        self.obs = None
         self.reset()
 
     def rebind(self, frame_rate: float) -> None:
@@ -122,6 +128,8 @@ class AdmissionController:
                 self.admitted += 1
                 return True
             self.shed += 1
+            if self.obs is not None:
+                self.obs.shed(t, "shed")
             return False
         # queue depth: retire virtually-served frames, then check occupancy
         q = self._finish
@@ -129,6 +137,8 @@ class AdmissionController:
             q.popleft()
         if len(q) >= self.policy.depth:
             self.shed += 1
+            if self.obs is not None:
+                self.obs.shed(t, "shed")
             return False
         self._free = max(self._free, t) + 1.0 / self._drain
         q.append(self._free)
@@ -154,6 +164,8 @@ class AdmissionController:
             return self.admit(t)
         if backlog >= self.policy.depth:
             self.shed += 1
+            if self.obs is not None:
+                self.obs.shed(t, "shed")
             return False
         self.admitted += 1
         return True

@@ -1,0 +1,165 @@
+"""Low-overhead metrics registry: per-module counters, gauges, histograms.
+
+The registry accumulates cheap scalar state per module while the serving
+loop runs — integer counters (batches, close causes, backpressure parks),
+running sums for means (batch occupancy, dummy fill), a busy-time
+integrator for utilization, and small fixed-bucket histograms (queue depth
+at batch close).  At every control-plane epoch boundary (and once at end of
+run) the accumulators flush into one row per module per epoch; the rows
+travel on ``ServeResult.metrics`` as a :class:`MetricsSnapshot`.
+
+Everything here is plain Python arithmetic on a handful of attributes — no
+numpy allocation per event — so the registry stays inside the tracing
+overhead budget (the ``pipeline_speed`` smoke gate's <= 10%).
+"""
+from __future__ import annotations
+
+from bisect import bisect_right
+from dataclasses import dataclass, field
+
+# fixed queue-depth histogram buckets (instances waiting at batch close)
+_DEPTH_BUCKETS = (0, 1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+class _ModuleAcc:
+    """One module's accumulators between two epoch flushes."""
+
+    __slots__ = (
+        "batches", "members", "phantoms", "slots", "parks", "busy",
+        "closes", "depth_hist", "depth_n",
+    )
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        self.batches = 0       # batches started
+        self.members = 0       # members (real + phantom) across started batches
+        self.phantoms = 0      # phantom members across started batches
+        self.slots = 0         # capacity slots across started batches
+        self.parks = 0         # deliveries parked by backpressure
+        self.busy = 0.0        # seconds of machine service time
+        self.closes = {}       # close cause -> count
+        self.depth_hist = [0] * (len(_DEPTH_BUCKETS) + 1)
+        self.depth_n = 0
+
+    @property
+    def empty(self) -> bool:
+        return self.batches == 0 and self.parks == 0 and not self.closes
+
+
+@dataclass
+class MetricsSnapshot:
+    """Flushed per-module-per-epoch metric rows (``ServeResult.metrics``)."""
+
+    rows: list[dict] = field(default_factory=list)
+    depth_buckets: tuple = _DEPTH_BUCKETS
+
+    def for_module(self, module: str) -> list[dict]:
+        return [r for r in self.rows if r["module"] == module]
+
+    def table(self) -> str:
+        """Aligned text table of the per-epoch rows (``serve.py --trace``)."""
+        cols = (
+            "epoch", "module", "t0", "t1", "batches", "occupancy",
+            "dummy_fill", "stalls", "utilization", "duration_err",
+        )
+        lines = ["  ".join(f"{c:>12}" for c in cols)]
+        for r in self.rows:
+            cells = []
+            for c in cols:
+                v = r.get(c, 0.0)
+                cells.append(
+                    f"{v:>12.4f}" if isinstance(v, float) else f"{v:>12}"
+                )
+            lines.append("  ".join(cells))
+        return "\n".join(lines)
+
+
+class MetricsRegistry:
+    """Accumulate per-module counters; flush one row per module per epoch."""
+
+    __slots__ = ("_acc", "rows", "_t0", "_epoch")
+
+    def __init__(self):
+        self._acc: dict[str, _ModuleAcc] = {}
+        self.rows: list[dict] = []
+        self._t0 = 0.0
+        self._epoch = 0
+
+    def _mod(self, module: str) -> _ModuleAcc:
+        acc = self._acc.get(module)
+        if acc is None:
+            acc = self._acc[module] = _ModuleAcc()
+        return acc
+
+    # -- hot-path accumulation ----------------------------------------------
+    def batch(self, module: str, size: int, cap: int, n_phantom: int,
+              dur: float) -> None:
+        acc = self._mod(module)
+        acc.batches += 1
+        acc.members += size
+        acc.phantoms += n_phantom
+        acc.slots += cap
+        acc.busy += dur
+
+    def close(self, module: str, cause: str, depth: int) -> None:
+        acc = self._mod(module)
+        acc.closes[cause] = acc.closes.get(cause, 0) + 1
+        acc.depth_hist[bisect_right(_DEPTH_BUCKETS, depth)] += 1
+        acc.depth_n += 1
+
+    def park(self, module: str) -> None:
+        self._mod(module).parks += 1
+
+    def add_busy(self, module: str, seconds: float) -> None:
+        self._mod(module).busy += seconds
+
+    # -- column-level accumulation (segment fast path / flat engine) --------
+    def bulk(self, module: str, *, batches: int, members: int,
+             phantoms: int, slots: int, busy: float) -> None:
+        """Fold one vectorized module replay's aggregate into the epoch."""
+        acc = self._mod(module)
+        acc.batches += batches
+        acc.members += members
+        acc.phantoms += phantoms
+        acc.slots += slots
+        acc.busy += busy
+        if batches:
+            acc.closes["full"] = acc.closes.get("full", 0) + batches
+
+    # -- epoch flush --------------------------------------------------------
+    def flush(self, t1: float, machines_of: "dict[str, int]",
+              duration_err: float = 0.0) -> None:
+        """Close the accumulation window ``[t0, t1)`` into one row per
+        module; ``machines_of`` maps module -> active machine count (the
+        utilization denominator)."""
+        span = max(t1 - self._t0, 0.0)
+        for module, acc in sorted(self._acc.items()):
+            if acc.empty:
+                continue
+            n_m = max(machines_of.get(module, 1), 1)
+            members = max(acc.members, 1)
+            row = {
+                "epoch": self._epoch,
+                "module": module,
+                "t0": self._t0,
+                "t1": t1,
+                "batches": acc.batches,
+                "occupancy": acc.members / max(acc.slots, 1),
+                "dummy_fill": acc.phantoms / members,
+                "stalls": acc.parks,
+                "utilization": (
+                    acc.busy / (n_m * span) if span > 0.0 else 0.0
+                ),
+                "duration_err": duration_err,
+                "closes": dict(acc.closes),
+                "queue_depth_hist": list(acc.depth_hist),
+            }
+            self.rows.append(row)
+            acc.reset()
+        self._t0 = t1
+        self._epoch += 1
+
+    def snapshot(self) -> MetricsSnapshot:
+        return MetricsSnapshot(rows=self.rows)

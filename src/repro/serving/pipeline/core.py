@@ -122,6 +122,7 @@ def run_pipeline(
     fast_path: bool = True,
     event_queue: str = "heap",
     quantum: "float | None" = None,
+    obs=None,
 ) -> PipelineResult:
     """Co-simulate ``n_frames`` frames through ``stages`` along ``dag``.
 
@@ -140,6 +141,11 @@ def run_pipeline(
     end-of-stream quiescence (and golden equivalence with the control loop
     disabled) is untouched.  ``e2e_hint`` is the fallback latency estimate
     for clients whose retry ``backoff`` re-reads live plan state.
+
+    ``obs`` (a `repro.serving.observability.Observability`, or None) is the
+    passive telemetry sink: the loop reports batch spans, flush causes,
+    sheds, parks, and epoch boundaries to it but never reads it back —
+    results are bit-identical with observability on or off.
     """
     if tail not in ("flush", "drop"):
         raise ValueError(f"unknown tail policy {tail!r}")
@@ -163,7 +169,9 @@ def run_pipeline(
             # vectorized flat kernel (the PR-3 equivalence theorem, cached;
             # streams run in the event loop's causal order, backdated
             # end-of-stream tails included — see fastpath docstring)
-            return fastpath.run_flat_segment(dag, stages, n_frames, issue, tail)
+            return fastpath.run_flat_segment(
+                dag, stages, n_frames, issue, tail, obs=obs
+            )
     rng = np.random.default_rng(seed)
     topo = dag.topo_order()
     torder = {m: i for i, m in enumerate(topo)}
@@ -197,6 +205,12 @@ def run_pipeline(
     parents_left, child_void, child_avail = (
         ft.parents_left, ft.child_void, ft.child_avail,
     )
+    stalled, fan = ft.stalled, ft.fan
+    # wire the stages' telemetry sinks: the always-on partial-flush forensic
+    # column, and the optional observability hooks
+    for st_ in stages.values():
+        st_.flushed_col = ft.flushed
+        st_.obs = obs
 
     attempts = 0
     next_frame = 0      # closed-loop global frame counter
@@ -307,6 +321,7 @@ def run_pipeline(
             return
         avail[m][f] = t
         pend[m][f] = c
+        fan[m][f] = c
         pend_total[m] += c
         if (
             not reference
@@ -324,6 +339,9 @@ def run_pipeline(
             inst = Instance(f, t)
             if st.parked or not st.has_space:
                 st.parked.append((inst, blocker))
+                stalled[f] = True
+                if obs is not None:
+                    obs.park(t, m)
                 if blocker is not None:
                     blocked[blocker] = blocked.get(blocker, 0) + 1
             else:
@@ -366,6 +384,8 @@ def run_pipeline(
         if pend[m][f] == 0:
             if math.isnan(finish[m][f]):
                 lost[f] = True
+                if obs is not None:
+                    obs.shed(t, "pipeline_drop")
                 stage_resolved(m, f, t, False, entries, None)
             else:
                 # partial completion: the frame proceeds with the instances
@@ -418,6 +438,8 @@ def run_pipeline(
             return
         issue_t[f] = t
         shed[f] = True
+        if obs is not None:
+            obs.shed(t, "shed")
         resolve_shed(f, t)
 
     def resolve_shed(f: int, t: float) -> None:
@@ -499,7 +521,10 @@ def run_pipeline(
                         # frontend stops injecting phantoms once the stream
                         # ends (single-module reference semantics)
                         t_last = max(i.ready for i in reals)
-                        st.close(mid, batch_ready=t_last, now=t_last, push=push)
+                        st.close(
+                            mid, batch_ready=t_last, now=t_last, push=push,
+                            cause="eos",
+                        )
                     else:
                         for inst in st.discard_leftover(mid):
                             handle_instance_drop(m, inst.frame, t_now, entries)
@@ -562,6 +587,8 @@ def run_pipeline(
                     # filling must not eat the capacity that drains backlog
                     if st.has_space and not st.parked and not st.service_backlog:
                         st.stats.phantom += 1
+                        if obs is not None:
+                            obs.phantom(t, m)
                         st.deliver(Instance(-1, t), t, push)
                     else:
                         # full stage: go dormant instead of re-pushing — a
@@ -628,7 +655,7 @@ def run_pipeline(
             mid, token = payload
             core = st.cores.get(mid)  # None: the core retired after a drain
             if core is not None and token == core.token and core.buf:
-                st.close(mid, batch_ready=t, now=t, push=push)
+                st.close(mid, batch_ready=t, now=t, push=push, cause="deadline")
                 drain_parked(st, t)
         else:  # _K_EPOCH: control-plane boundary (after same-instant events)
             if payload is not None and payload[0] == "relax":
@@ -652,6 +679,13 @@ def run_pipeline(
                 continue  # stream fully issued: the epoch chain retires,
                 #           end-of-stream quiescence proceeds untouched
             updates = control.on_epoch(t)
+            if obs is not None:
+                # flush the closing window's metrics under the machine set
+                # that served it (the swap below applies the next window's)
+                obs.epoch(
+                    t, control.history[-1],
+                    {m: len(stages[m].machines) for m in topo},
+                )
             if updates:
                 for m, upd in updates.items():
                     stages[m].apply_update(upd, t, push)

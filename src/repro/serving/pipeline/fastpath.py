@@ -87,6 +87,7 @@ def run_flat_segment(
     n_frames: int,
     issue: np.ndarray,
     tail: str,
+    obs=None,
 ) -> PipelineResult:
     """Replay one quiescent segment (the whole eligible run) vectorized.
 
@@ -97,6 +98,12 @@ def run_flat_segment(
     docstring).  Per-frame records land in the same `FrameTable` columns
     the event loop fills, so the returned `PipelineResult` is
     indistinguishable from the general path's.
+
+    ``obs`` (an `observability.Observability`) receives *column-level*
+    metrics only — per-module batch counts, occupancy, and exact busy time
+    from the per-machine batch tallies — never per-event trace spans:
+    keeping the fast path allocation-free per event is what holds sampled
+    tracing inside the CI overhead gate.
     """
     topo = dag.topo_order()
     torder = {m: i for i, m in enumerate(topo)}
@@ -148,6 +155,7 @@ def run_flat_segment(
         order = causal_order(ready, in_depth, in_emit)
         alive = order[~voided[order]]
         counts = fanout_counts(alive.size, st.fanout.phi)
+        ft.fan[m][alive] = counts
         taken = counts > 0
         entered = alive[taken]
         ft.avail[m][entered] = ready[entered]
@@ -194,6 +202,23 @@ def run_flat_segment(
         ss.batches += rep.n_batches
         ss.dropped += instances.size - int(done.sum())
         ss.latencies.extend((rep.finish[done] - ready_inst[done]).tolist())
+        if obs is not None:
+            # exact column-level accounting: ModuleReplay tallies executed
+            # batches per machine, so busy time and capacity slots come
+            # from each machine's own config — no per-event hooks
+            by_mid = {mm.mid: mm.config for mm in machines}
+            obs.bulk_module(
+                m,
+                batches=rep.n_batches,
+                members=int(done.sum()),
+                phantoms=0,
+                slots=sum(
+                    k * by_mid[mid].batch for mid, k in rep.batches.items()
+                ),
+                busy=sum(
+                    k * by_mid[mid].duration for mid, k in rep.batches.items()
+                ),
+            )
 
     sink_finish = np.stack([ft.finish[s] for s in sinks])
     ok = ~np.isnan(sink_finish).any(axis=0)

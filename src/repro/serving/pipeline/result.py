@@ -48,7 +48,8 @@ class FrameTable:
     __slots__ = (
         "n", "topo", "issue", "shed", "lost", "resolved", "sink_bad",
         "sink_max", "sinks_left", "e2e", "avail", "finish", "pend",
-        "parents_left", "child_void", "child_avail",
+        "parents_left", "child_void", "child_avail", "stalled", "flushed",
+        "fan",
     )
 
     def __init__(
@@ -77,6 +78,11 @@ class FrameTable:
         }
         self.child_void = {m: np.zeros(n, dtype=bool) for m in topo}
         self.child_avail = {m: np.zeros(n) for m in topo}
+        # always-on forensic columns (`observability.forensics`): set at
+        # events that already touch the frame, so they cost one cell write
+        self.stalled = np.zeros(n, dtype=bool)   # parked by backpressure
+        self.flushed = np.zeros(n, dtype=bool)   # served from a partial batch
+        self.fan = {m: np.zeros(n, dtype=np.int64) for m in topo}
 
     def finalize(self, dag, stats: dict, attempts: int) -> "PipelineResult":
         """Classify every frame and assemble the result (one vector pass).
@@ -106,6 +112,9 @@ class FrameTable:
             skipped=skipped,
             stats=stats,
             attempts=attempts,
+            stalled=self.stalled,
+            flushed=self.flushed,
+            fan=self.fan,
         )
 
 
@@ -124,6 +133,12 @@ class PipelineResult:
     skipped: np.ndarray               # bool: excluded by a zero-instance fanout
     stats: dict[str, StageStats]
     attempts: int = 0                 # closed-loop issue attempts (0 = open loop)
+    # forensic columns (see `observability.forensics`): parked under
+    # backpressure, served from a partial (deadline/drain/EOS) batch, and
+    # per-module realized fanout counts
+    stalled: "np.ndarray | None" = None
+    flushed: "np.ndarray | None" = None
+    fan: "dict[str, np.ndarray] | None" = None
     _path_cache: "tuple[np.ndarray, dict[str, np.ndarray]] | None" = field(
         default=None, repr=False, compare=False
     )
@@ -175,3 +190,11 @@ class PipelineResult:
             return {m: 0.0 for m in self.modules}
         attr, _ = self.overrun_attribution(budgets)
         return {m: float(attr[m][late].mean()) for m in self.modules}
+
+    def miss_report(self, slo: float, epochs=None):
+        """Classify every missed/shed frame into exactly one cause (an
+        `observability.forensics.MissReport`, conservation-checked —
+        ``epochs`` is the control plane's audit trail when one ran)."""
+        from ..observability.forensics import classify_misses
+
+        return classify_misses(self, slo, epochs)

@@ -258,6 +258,12 @@ class ModuleStage:
         # model-vs-measured estimator feed).
         self.service_time = service_time
         self.service_obs = service_obs
+        # observability (`repro.serving.observability`): ``obs`` is the
+        # optional hook sink (None = hook-free hot path), ``flushed_col``
+        # the FrameTable's always-on partial-flush forensic column — both
+        # wired by `pipeline.core.run_pipeline`
+        self.obs = None
+        self.flushed_col = None
         self.backlog = 0  # instances delivered but not yet started service
         # deliveries parked by backpressure: (instance, blocker) where
         # blocker is the (stage, mid) whose outputs they are, or None for
@@ -336,12 +342,14 @@ class ModuleStage:
             if mid in claimed or core.draining:
                 continue
             core.draining = True
+            if self.obs is not None:
+                self.obs.drain(now, self.name, mid)
             if core.buf:
                 # drained machines finish their open batch: it closes now
                 # (partial) and their queued work runs to completion; a
                 # phantom-only buffer is discarded — nothing real is lost
                 if any(i.real for i in core.buf):
-                    self.close(mid, batch_ready=now, now=now, push=push)
+                    self.close(mid, batch_ready=now, now=now, push=push, cause="drain")
                 else:
                     self.discard_leftover(mid)
         # retire cores that finished draining: they hold no work and no
@@ -465,8 +473,26 @@ class ModuleStage:
                     self.close(mid, batch_ready=now, now=now, push=push)
                     buf = core.buf  # close swapped in a fresh buffer
 
-    def close(self, mid: int, batch_ready: float, now: float, push: Callable) -> None:
-        self.cores[mid].close(batch_ready)
+    def close(
+        self, mid: int, batch_ready: float, now: float, push: Callable,
+        cause: str = "full",
+    ) -> None:
+        """Close ``mid``'s formation buffer (``cause``: why — ``"full"`` for
+        a filled batch, ``"deadline"`` / ``"eos"`` / ``"drain"`` for partial
+        flushes).  A partial flush marks its real members in the forensic
+        ``flushed`` column: their service burned unfilled slots."""
+        core = self.cores[mid]
+        if cause != "full":
+            col = self.flushed_col
+            if col is not None:
+                for i in core.buf:
+                    if i.frame >= 0:
+                        col[i.frame] = True
+        if self.obs is not None:
+            self.obs.batch_close(
+                now, self.name, mid, len(core.buf), cause, self.backlog
+            )
+        core.close(batch_ready)
         self.start_next(mid, now, push)
 
     def start_next(self, mid: int, now: float, push: Callable) -> bool:
@@ -496,6 +522,19 @@ class ModuleStage:
         self.stats.batches += 1
         self.backlog -= len(members)
         self.in_service[mid] = members
+        tel = self.obs
+        if tel is not None:
+            d = (
+                drawn[0]
+                if (src is not None or obs is not None) and drawn
+                else core.machine.config.duration
+            )
+            tel.batch_start(
+                self.name, mid, end - d, d, len(members),
+                core.machine.config.batch,
+                sum(1 for i in members if i.frame < 0),
+            )
+            tel.queue_depth(now, self.name, self.backlog)
         push(end, _K_FREE, self.name, (mid,))
         return True
 
