@@ -897,6 +897,93 @@ def bench_replay_speed(n: int) -> None:
         raise SystemExit(1)
 
 
+# ------------------------------------------------- multi-tenant shared pool
+def bench_multitenant_sweep(n: int) -> None:
+    """Consolidated shared pool vs per-app dedicated deployments (ISSUE-8).
+
+    The five paper apps at 1/8 rate — the low-rate regime where every
+    plan strands a large fractional machine residue per module — are
+    served two ways: per-app dedicated (every fractional allocation
+    rounded up to whole devices: the integer bill a real deployment
+    pays) and one shared pool (`SharedPool`: FFD co-location of residues
+    under the calibrated interference model, co-located batches honestly
+    slowed, e2e-SLO feasibility guard on every pairing).
+
+    Acceptance (hard smoke gates): per-app frame accounting conserves;
+    aggregate attainment >= 0.97 with interference ON; consolidated pool
+    cost >= 1.15x cheaper than the dedicated bill.
+    """
+    import numpy as np
+
+    from repro.serving import SharedPool
+    from repro.serving.tenancy import dedicated_cost
+    from repro.workloads.apps import app_by_name, make_workload
+
+    seeds = (
+        ("traffic", 100.0, 2.0), ("face", 150.0, 2.5), ("pose", 60.0, 3.0),
+        ("caption", 90.0, 2.5), ("actdet", 80.0, 3.0),
+    )
+    scale = 0.125
+    n_frames = 400 if SMOKE else max(800, min(n * 2, 2400))
+    plans = {}
+    for name, rate, slo in seeds:
+        wl = make_workload(app_by_name(name), rate * scale, slo)
+        plan = Planner(B.HARPAGON).plan(wl, PROFILES)
+        if not plan.feasible:
+            emit(
+                f"multitenant_{name}", 0.0, "infeasible",
+                app=name, feasible=False,
+            )
+            return
+        plans[name] = plan
+    pool = SharedPool(plans)
+    t0 = time.perf_counter()
+    res = pool.run(n_frames)
+    dt = time.perf_counter() - t0
+    conserved = all(res.conservation().values())
+    for name, _, slo in seeds:
+        r = res.results[name]
+        att = float(
+            (np.asarray(r.e2e_latencies) <= slo + 1e-9).sum()
+            / max(1, r.offered)
+        )
+        emit(
+            f"multitenant_{name}", 0.0,
+            f"attain={att:.4f}|p99={r.p99:.3f}|offered={r.offered}",
+            app=name, attainment=round(att, 4), p99=round(r.p99, 4),
+            offered=r.offered, shed=r.shed, dropped=r.dropped,
+        )
+    emit(
+        "multitenant_sweep",
+        dt * 1e6,
+        f"savings={res.savings:.3f}x|attain={res.attainment:.4f}"
+        f"|pool={res.pool_cost:.4g}|dedicated={res.dedicated_cost:.4g}"
+        f"|shared={res.device_plan.n_shared}/{len(res.device_plan.devices)}"
+        f"|conserved={conserved}|target>=1.15x@0.97",
+        savings=round(res.savings, 4),
+        attainment=round(res.attainment, 4),
+        pool_cost=round(res.pool_cost, 4),
+        dedicated_cost=round(res.dedicated_cost, 4),
+        n_devices=len(res.device_plan.devices),
+        n_shared=res.device_plan.n_shared,
+        conserved=bool(conserved),
+    )
+    if SMOKE and not conserved:
+        print(
+            "# SMOKE FAILURE: shared-pool frame accounting does not "
+            f"conserve ({res.conservation()})",
+            file=sys.stderr,
+        )
+        raise SystemExit(1)
+    if SMOKE and (res.attainment < 0.97 or res.savings < 1.15):
+        print(
+            f"# SMOKE FAILURE: multitenant savings {res.savings:.3f}x < 1.15x "
+            f"or attainment {res.attainment:.4f} < 0.97 (interference on)",
+            file=sys.stderr,
+        )
+        raise SystemExit(1)
+
+
 # ----------------------------------------------------------- runtime
 def bench_runtime(n: int) -> None:
     """Planner runtime vs brute force (paper: 5 ms vs 35.9 s, >7000x)."""
@@ -933,6 +1020,7 @@ BENCHES = {
     "shed_sweep": bench_shed_sweep,
     "pipeline_sweep": bench_pipeline_sweep,
     "diurnal_sweep": bench_diurnal_sweep,
+    "multitenant_sweep": bench_multitenant_sweep,
     "pipeline_speed": bench_pipeline_speed,
     "wallclock_gap": bench_wallclock_gap,
     "planner_speed": bench_planner_speed,
@@ -943,7 +1031,8 @@ BENCHES = {
 # serving-subsystem rows tracked across PRs by `--json` (BENCH_serving.json)
 _SERVING_PREFIXES = (
     "replay_", "slo_sweep_", "shed_sweep_", "shed_causes_", "pipeline_sweep_",
-    "diurnal_", "pipeline_speed", "planner_speed", "wallclock_gap_",
+    "diurnal_", "multitenant_", "pipeline_speed", "planner_speed",
+    "wallclock_gap_",
 )
 
 # --smoke: CI-sized inputs + hard regression gates (see bench_replay_speed)

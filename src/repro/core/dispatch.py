@@ -234,12 +234,13 @@ class Machine:
     rate: float  # assigned request rate (== throughput if at full capacity)
 
 
-def _machine_fractions(allocs: list[Alloc]) -> list[tuple[Alloc, float]]:
+def machine_fractions(allocs: list[Alloc]) -> list[tuple[Alloc, float]]:
     """The single machine enumerator: ``(owning alloc, capacity fraction)``
     per machine id, ratio-descending, full machines first, fractional tail
     last.  Everything that needs a per-machine-id view of an allocation set
-    (`expand_machines`, `remaining_workloads`) derives from this walk so the
-    id correspondence is structural, not re-implemented."""
+    (`expand_machines`, `remaining_workloads`, the tenancy layer's
+    device-centric plan view) derives from this walk so the id
+    correspondence is structural, not re-implemented."""
     out: list[tuple[Alloc, float]] = []
     for a in sorted(allocs, key=lambda x: -x.eff_ratio):
         n_full = math.floor(a.machines + 1e-12)
@@ -259,7 +260,7 @@ def expand_machines(allocs: list[Alloc]) -> list[Machine]:
     """
     return [
         Machine(mid, a.config, frac * a.cap)
-        for mid, (a, frac) in enumerate(_machine_fractions(allocs))
+        for mid, (a, frac) in enumerate(machine_fractions(allocs))
     ]
 
 
@@ -269,13 +270,13 @@ def remaining_workloads(allocs: list[Alloc]) -> dict[int, float]:
     Theorem 1: the machines of allocation *a* collect their batches at the
     total rate of traffic dispatched at-or-below *a*'s rank — not at the
     whole module rate.  Machine ids match `expand_machines` (both derive
-    from `_machine_fractions`).  Only real rates count: the caller is the
+    from `machine_fractions`).  Only real rates count: the caller is the
     ``timeout="budget"`` fill-time floor for plans whose dummy traffic is
     *not* streamed, where phantoms cannot help fill a batch.
     """
     return {
         mid: sum(x.rate for x in allocs if x.eff_ratio <= a.eff_ratio + _EPS)
-        for mid, (a, _frac) in enumerate(_machine_fractions(allocs))
+        for mid, (a, _frac) in enumerate(machine_fractions(allocs))
     }
 
 

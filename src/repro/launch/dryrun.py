@@ -26,7 +26,7 @@ from ..configs import ARCHS, SHAPES
 from ..kernels.ops import MeshCtx, mesh_context
 from ..models import Model
 from ..models.model import segmentize
-from ..profiling.analytics import flops_per_token, layer_flops_per_token, param_count
+from ..profiling.analytic import flops_per_token, layer_flops_per_token, param_count
 from .mesh import dp_axes, make_production_mesh
 from .roofline import roofline_from_compiled
 from .shardings import (

@@ -1,6 +1,12 @@
-from .analytic import arch_profile, module_duration
-from .analytics import flops_per_token, kv_cache_bytes_per_token, param_count
+from .analytic import (
+    arch_profile,
+    flops_per_token,
+    kv_cache_bytes_per_token,
+    module_duration,
+    param_count,
+)
 from .hardware import CATALOG, TARGET, TPUSpec
+from .interference import InterferenceModel, calibrate as calibrate_interference
 from .measured import (
     corrected_profile,
     corrected_profiles,
@@ -9,8 +15,8 @@ from .measured import (
 )
 
 __all__ = [
-    "CATALOG", "TARGET", "TPUSpec", "arch_profile", "corrected_profile",
-    "corrected_profiles", "duration_scale", "flops_per_token",
-    "kv_cache_bytes_per_token", "module_duration", "param_count",
-    "quantize_scale",
+    "CATALOG", "InterferenceModel", "TARGET", "TPUSpec", "arch_profile",
+    "calibrate_interference", "corrected_profile", "corrected_profiles",
+    "duration_scale", "flops_per_token", "kv_cache_bytes_per_token",
+    "module_duration", "param_count", "quantize_scale",
 ]

@@ -39,6 +39,11 @@ Layers, ingress to silicon:
   frame classified into exactly one cause, conservation-checked).
   Selected via ``ServingEngine.run(observability=True)`` (or an
   ``ObservabilityConfig``); results are bit-identical with it on or off.
+* ``tenancy``   — the multi-tenant shared pool: a device-centric plan view
+  (`DevicePlan`), a global allocator FFD-packing fractional module residues
+  onto shared devices under an interference-aware e2e-SLO guard, and
+  `SharedPool` running every app on one consolidated pool with co-located
+  batches honestly slowed by a calibrated interference model.
 * ``simulator`` — module-level Theorem-1 validation harness.
 * ``reference`` — the frozen seed loops (golden equivalence baselines).
 
@@ -99,12 +104,20 @@ from .replay import ModuleReplay, expand_fanout, replay_machine, replay_module
 from .reference import engine_run_reference, simulate_reference
 from .service_time import (
     AnalyticServiceTime,
+    InterferenceServiceTime,
     LiveServiceTime,
     ServiceTimeSource,
     TraceServiceTime,
     resolve_service_time,
 )
 from .simulator import SimResult, simulate
+from .tenancy import (
+    DevicePlan,
+    GlobalAllocator,
+    PoolResult,
+    SharedPool,
+    TenancyConfig,
+)
 
 __all__ = [
     "ARRIVALS",
@@ -114,7 +127,10 @@ __all__ = [
     "ControlRuntime",
     "EpochRecord",
     "FanoutSpec",
+    "DevicePlan",
     "FrontendConfig",
+    "GlobalAllocator",
+    "InterferenceServiceTime",
     "LiveServiceTime",
     "MISS_CAUSES",
     "MetricsSnapshot",
@@ -125,11 +141,14 @@ __all__ = [
     "PipelineConfig",
     "PipelineResult",
     "ModuleStats",
+    "PoolResult",
     "QueueDepth",
     "ServeResult",
     "ServiceTimeSource",
     "ServingEngine",
+    "SharedPool",
     "SimResult",
+    "TenancyConfig",
     "TokenBucket",
     "TraceRecorder",
     "TraceServiceTime",

@@ -76,11 +76,14 @@ class AdmissionController:
                 raise ValueError("queue-depth needs drain_rate>0 and depth>=1")
         else:
             raise TypeError(f"unknown admission policy {policy!r}")
-        # passive telemetry sink (`observability.Observability`): the flat
-        # path wires it before shed_stream so ingress sheds land in the
-        # trace/metrics; the pipelined loop emits its own shed events at
-        # frame resolution instead, so it leaves this unset.  Survives
-        # reset() — a reset clears admission state, not the observer.
+        # passive telemetry sink (`observability.Observability`): both
+        # engine paths wire it — the flat path before shed_stream, the
+        # pipelined loop before run_pipeline — so every admission denial
+        # lands in the trace/metrics at decision resolution (closed-loop
+        # interim retry denials included); the pipelined loop's terminal
+        # shed emit defers to a wired controller to avoid double counts.
+        # Survives reset() — a reset clears admission state, not the
+        # observer.
         self.obs = None
         self.reset()
 

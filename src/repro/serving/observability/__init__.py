@@ -127,6 +127,31 @@ class Observability:
         if self.trace is not None:
             self.trace.instant(t, module, mid, "drain")
 
+    # -- multi-tenant pool hooks (always recorded, like control events) -----
+    def colocate(self, t: float, did: int, app: str, module: str, mid: int,
+                 fraction: float) -> None:
+        """The allocator packed a module residue onto shared device ``did``."""
+        if self.trace is not None:
+            self.trace.instant(
+                t, "(pool)", did, "colocate",
+                app=app, stage=module, machine=mid, frac=round(fraction, 4),
+            )
+
+    def evict(self, t: float, did: int, app: str, module: str,
+              mid: int) -> None:
+        """A repack removed a residue from its shared device ``did``."""
+        if self.trace is not None:
+            self.trace.instant(
+                t, "(pool)", did, "evict", app=app, stage=module, machine=mid,
+            )
+
+    def device_occupancy(self, t: float, did: int, occupancy: float) -> None:
+        """Per-device occupancy sample after a (re)pack."""
+        if self.trace is not None:
+            self.trace.counter(
+                t, "(pool)", f"dev{did}_occupancy", round(occupancy, 4)
+            )
+
     def phantom(self, t: float, module: str) -> None:
         """An adaptive phantom was injected into ``module``'s formation."""
         tr = self.trace

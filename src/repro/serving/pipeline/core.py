@@ -438,7 +438,10 @@ def run_pipeline(
             return
         issue_t[f] = t
         shed[f] = True
-        if obs is not None:
+        if obs is not None and (admission is None or admission.obs is None):
+            # a wired admission controller already emitted this denial (at
+            # decision resolution — interim retry denials included); only
+            # emit here when the terminal shed would otherwise go unseen
             obs.shed(t, "shed")
         resolve_shed(f, t)
 

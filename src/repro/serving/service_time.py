@@ -133,6 +133,49 @@ class TraceServiceTime(ServiceTimeSource):
         return d
 
 
+class InterferenceServiceTime(ServiceTimeSource):
+    """Stretch specific machines' durations by co-location slowdown factors.
+
+    ``factors`` maps ``(module, machine_id) -> multiplicative slowdown``
+    (>= 1.0) for the residue machines the tenancy allocator packed onto a
+    shared device; every other machine runs at the underlying duration.
+    The mapping is read *live* on every batch start, so the shared-pool
+    runtime can mutate it in place when an epoch repack changes who a
+    machine is co-resident with (hot-swapped device plans).
+
+    ``base`` is an optional wrapped source (trace / live measurements);
+    ``None`` stretches the profiled constant.  ``kind`` is non-analytic on
+    purpose: a co-located tail is *not* the profiled constant the
+    vectorized flat kernel replays, so eligible runs stay on the event
+    loop where per-machine durations are honored.
+    """
+
+    kind = "interference"
+
+    def __init__(
+        self,
+        factors: "Mapping[tuple[str, int], float]",
+        base: "ServiceTimeSource | None" = None,
+    ):
+        for k, s in factors.items():
+            if s < 1.0 - 1e-12:
+                raise ValueError(f"slowdown factors must be >= 1 ({k!r}: {s})")
+        self.factors = dict(factors)
+        self.base = base
+
+    def duration(self, module: str, machine: Machine, n_members: int) -> float:
+        d = (
+            self.base.duration(module, machine, n_members)
+            if self.base is not None
+            else machine.config.duration
+        )
+        return d * self.factors.get((module, machine.mid), 1.0)
+
+    def reset(self) -> None:
+        if self.base is not None:
+            self.base.reset()
+
+
 class LiveServiceTime(ServiceTimeSource):
     """Measure real executor forwards, cache steady-state per (module, batch).
 

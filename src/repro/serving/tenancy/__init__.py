@@ -1,0 +1,39 @@
+"""Multi-tenant shared pool: one device pool serving every app.
+
+Three layers (see each module's docstring for the full story):
+
+* :mod:`.device`    — the device-centric plan view (`DevicePlan` /
+  `DeviceSlot`), derived from and diffable against the module-centric
+  `core.harpagon.Plan`.
+* :mod:`.allocator` — the `GlobalAllocator`: FFD bin-packing of
+  fractional module residues onto shared devices with an end-to-end-SLO
+  feasibility guard, plus the `submit` epoch-arbitration entry point.
+* :mod:`.pool`      — `SharedPool`, the engine wiring: per-app serving
+  loops with interference-inflated service times on co-located machines,
+  hot-swapped device plans, and the consolidated-vs-dedicated ledger
+  (`PoolResult`).
+"""
+from .allocator import AllocatorConfig, GlobalAllocator, dedicated_cost, plan_slots
+from .device import (
+    Device,
+    DevicePlan,
+    DevicePlanDelta,
+    DeviceSlot,
+    diff_device_plans,
+)
+from .pool import PoolResult, SharedPool, TenancyConfig
+
+__all__ = [
+    "AllocatorConfig",
+    "Device",
+    "DevicePlan",
+    "DevicePlanDelta",
+    "DeviceSlot",
+    "GlobalAllocator",
+    "PoolResult",
+    "SharedPool",
+    "TenancyConfig",
+    "dedicated_cost",
+    "diff_device_plans",
+    "plan_slots",
+]

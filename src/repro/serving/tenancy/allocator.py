@@ -1,0 +1,292 @@
+"""Global allocator: one device pool, arbitrated across per-app plans.
+
+Packing model
+-------------
+Every machine of every app's module-centric `Plan` (the
+`machine_fractions` walk: integer covers first, fractional tail last)
+becomes a :class:`DeviceSlot`.  Integer covers map one-to-one onto
+dedicated devices — a full machine fills its device, nothing can join
+it.  The fractional residues are where consolidation pays: they are
+bin-packed **first-fit-decreasing** onto shared devices of the same
+hardware class, at most ``max_coresident`` residues and total occupancy
+at most ``occupancy_cap`` per device.
+
+Feasibility guard
+-----------------
+A candidate co-location is admitted only if every affected app still
+meets its end-to-end SLO with interference folded in.  For each slot on
+the device (incumbents and newcomer alike) the profile row is inflated
+by ``InterferenceModel.slowdown(coresident occupancy)`` and the slot
+machine's Theorem-1 worst-case latency re-evaluated; the module's WCL
+override (the max of the plan's WCL and every co-located machine's
+inflated WCL) is then pushed through the app DAG's critical path, which
+must stay within ``slo * slo_slack``.  Guarding at the e2e level rather
+than per-module budget is deliberate: Harpagon's latency splitter drives
+module budgets *fractionally tight* (budget == WCL for most modules), so
+per-budget guarding would veto every co-location while the quantized
+configuration cascade routinely leaves real end-to-end slack.  A residue
+that would break (or be broken by) any app's SLO falls through to the
+next bin and, when no bin takes it, opens its own device; residues whose
+SLO cannot survive even a worst-case partner are marked ``dedicated``.
+
+Epoch arbitration
+-----------------
+`GlobalAllocator.submit(app, plan)` is the control-plane entry point:
+each app's `ControlRuntime` resubmits its freshly replanned module-centric
+plan every epoch; the allocator repacks the whole pool against the latest
+plan of every tenant and returns the new `DevicePlan` plus the
+colocate/evict delta the observability layer records.  Packing is a pure
+function of the submitted plans, so a repack with unchanged plans is a
+no-op delta.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Mapping
+
+from ...core.dispatch import Alloc, Policy, config_wcl, machine_fractions
+from ...core.harpagon import Plan
+from ...profiling.interference import InterferenceModel
+from .device import Device, DevicePlan, DevicePlanDelta, DeviceSlot, diff_device_plans
+
+_EPS = 1e-9
+
+
+def dedicated_cost(plans: "Mapping[str, Plan]") -> float:
+    """The integer-device bill of per-app exclusive deployments.
+
+    Fractional machine counts are what the planner's cost model charges
+    (frame-rate proportionality), but a dedicated deployment must round
+    every allocation up to whole devices — this is the baseline the
+    shared pool is measured against."""
+    total = 0.0
+    for plan in plans.values():
+        for s in plan.schedules.values():
+            for a in s.allocs:
+                total += math.ceil(a.machines - _EPS) * a.config.unit_price
+    return total
+
+
+def _tail_fill_rate(a: Alloc, allocs: "tuple[Alloc, ...]", frac: float,
+                    policy: Policy) -> float:
+    """The rate the machine's batch collects at — `module_wcl`'s algebra
+    for the machine the slot corresponds to."""
+    if policy is Policy.TC:
+        w = sum(
+            x.collect_rate for x in allocs
+            if x.eff_ratio <= a.eff_ratio + _EPS
+        )
+        if a.dummy > _EPS:
+            w = max(w, a.collect_rate)
+        return w
+    if policy in (Policy.RR, Policy.DT):
+        if frac < 1.0 - 1e-12:
+            return frac * a.cap + a.dummy
+        if a.derate < 1.0 - 1e-12:
+            return a.cap
+        return a.config.throughput
+    return a.config.throughput  # DT_OPT: d + b/t for every machine
+
+
+def plan_slots(app: str, plan: Plan) -> "tuple[list[DeviceSlot], list[DeviceSlot]]":
+    """All machines of ``plan`` as device slots: (integer covers, residues).
+
+    Slot ``mid`` is the machine id in the module's `expand_machines`
+    order — the id the pipelined stages address, so interference factors
+    land on exactly the machine that is actually co-located."""
+    policy = plan.options.policy
+    full: list[DeviceSlot] = []
+    resid: list[DeviceSlot] = []
+    for m, s in plan.schedules.items():
+        allocs = tuple(s.allocs)
+        for mid, (a, frac) in enumerate(machine_fractions(list(allocs))):
+            slot = DeviceSlot(
+                app=app,
+                module=m,
+                config=a.config,
+                fraction=frac,
+                mid=mid,
+                rate=frac * a.cap,
+                dummy=a.dummy if frac < 1.0 - 1e-12 else 0.0,
+                collect_rate=_tail_fill_rate(a, allocs, frac, policy),
+                budget=s.budget,
+            )
+            (full if frac >= 1.0 - 1e-12 else resid).append(slot)
+    return full, resid
+
+
+@dataclass
+class AllocatorConfig:
+    """Packing knobs for the :class:`GlobalAllocator`."""
+
+    interference: "InterferenceModel | None" = None
+    max_coresident: int = 2      # MPS-style pairing; >2 needs a braver model
+    occupancy_cap: float = 1.0   # total capacity fraction a device can host
+    guard: bool = True           # enforce e2e SLOs under interference
+    slo_slack: float = 1.0       # inflated e2e must stay <= slo * slo_slack
+
+    def __post_init__(self):
+        if self.max_coresident < 1:
+            raise ValueError("max_coresident must be >= 1")
+        if not 0.0 < self.occupancy_cap <= 1.0:
+            raise ValueError("occupancy_cap must be in (0, 1]")
+        if self.slo_slack <= 0.0:
+            raise ValueError("slo_slack must be positive")
+
+
+class GlobalAllocator:
+    """FFD bin-packing of plan residues with an e2e-SLO feasibility guard."""
+
+    def __init__(self, cfg: "AllocatorConfig | None" = None):
+        self.cfg = cfg or AllocatorConfig()
+        self.plans: dict[str, Plan] = {}
+        self.version = 0
+        self.device_plan: "DevicePlan | None" = None
+        # per-(app, module) committed WCL override under the current packing
+        self._wcl: dict[tuple[str, str], float] = {}
+
+    # -- guard ---------------------------------------------------------------
+
+    def _inflated_wcl(self, slot: DeviceSlot, coresident: float) -> float:
+        model = self.cfg.interference
+        policy = self.plans[slot.app].options.policy
+        cfg = slot.config if model is None else model.inflate(
+            slot.config, coresident
+        )
+        return config_wcl(
+            cfg, policy, collect_rate=slot.collect_rate, full=False
+        )
+
+    def _e2e_ok(self, overrides: "dict[tuple[str, str], float]") -> bool:
+        """Do the affected apps hold their SLO with these WCL overrides
+        (on top of the already-committed ones)?"""
+        for app in {a for a, _ in overrides}:
+            plan = self.plans[app]
+            wl = plan.workload
+            wcls = {m: s.wcl for m, s in plan.schedules.items()}
+            for (a, m), w in self._wcl.items():
+                if a == app:
+                    wcls[m] = max(wcls[m], w)
+            for (a, m), w in overrides.items():
+                if a == app:
+                    wcls[m] = max(wcls[m], w)
+            if wl.app.latency(wcls) > wl.slo * self.cfg.slo_slack + _EPS:
+                return False
+        return True
+
+    def _fits(self, members: "list[DeviceSlot]", cand: DeviceSlot) -> bool:
+        """Capacity + SLO check for ``cand`` joining ``members``."""
+        c = self.cfg
+        if len(members) + 1 > c.max_coresident:
+            return False
+        occ = sum(s.fraction for s in members) + cand.fraction
+        if occ > c.occupancy_cap + _EPS:
+            return False
+        if not c.guard or c.interference is None:
+            return True
+        overrides: dict[tuple[str, str], float] = {}
+        for s in members + [cand]:
+            w = self._inflated_wcl(s, occ - s.fraction)
+            key = (s.app, s.module)
+            overrides[key] = max(overrides.get(key, 0.0), w)
+        return self._e2e_ok(overrides)
+
+    def _commit(self, members: "list[DeviceSlot]") -> None:
+        """Record the device's slots' inflated WCLs as committed overrides."""
+        if not self.cfg.guard or self.cfg.interference is None:
+            return
+        occ = sum(s.fraction for s in members)
+        if len(members) < 2:
+            return
+        for s in members:
+            w = self._inflated_wcl(s, occ - s.fraction)
+            key = (s.app, s.module)
+            self._wcl[key] = max(self._wcl.get(key, 0.0), w)
+
+    # -- packing -------------------------------------------------------------
+
+    def pack(self, plans: "Mapping[str, Plan] | None" = None) -> DevicePlan:
+        """Pack the latest plan of every tenant into a fresh `DevicePlan`."""
+        if plans is not None:
+            self.plans.update(plans)
+        self._wcl = {}
+        full_all: list[DeviceSlot] = []
+        residues: list[DeviceSlot] = []
+        for app in sorted(self.plans):
+            f, r = plan_slots(app, self.plans[app])
+            full_all.extend(f)
+            residues.extend(r)
+        # integer covers: one dedicated, fully-occupied device each
+        bins: list[list[DeviceSlot]] = [[s] for s in full_all]
+        open_from = len(bins)  # bins below this index never take a partner
+        # residues: first-fit-decreasing over open shared bins
+        residues.sort(key=lambda s: (-s.fraction, s.key))
+        for slot in residues:
+            placed = False
+            for i in range(open_from, len(bins)):
+                members = bins[i]
+                if members[0].config.hardware != slot.config.hardware:
+                    continue
+                if self._fits(members, slot):
+                    members.append(slot)
+                    self._commit(members)
+                    placed = True
+                    break
+            if not placed:
+                bins.append([slot])
+        out: list[Device] = []
+        for did, members in enumerate(bins):
+            head = members[0]
+            dedicated = False
+            if (
+                len(members) == 1
+                and head.fraction < 1.0 - 1e-12
+                and self.cfg.guard
+                and self.cfg.interference is not None
+            ):
+                # the fallback marker: could this residue survive a
+                # worst-case partner (one filling the device)?  If not,
+                # the guard will keep it exclusive forever.
+                worst = self.cfg.occupancy_cap - head.fraction
+                w = self._inflated_wcl(head, worst)
+                dedicated = not self._e2e_ok({(head.app, head.module): w})
+            out.append(
+                Device(
+                    did=did,
+                    hardware=head.config.hardware,
+                    unit_price=head.config.unit_price,
+                    slots=tuple(members),
+                    dedicated=dedicated,
+                )
+            )
+        self.device_plan = DevicePlan(
+            devices=tuple(out),
+            version=self.version,
+            apps=tuple(sorted(self.plans)),
+        )
+        return self.device_plan
+
+    # -- epoch arbitration ---------------------------------------------------
+
+    def submit(
+        self, app: str, plan: Plan
+    ) -> "tuple[DevicePlan, DevicePlanDelta]":
+        """One tenant's control loop hands in its freshly replanned plan;
+        the pool repacks around it.  Returns the new device plan and the
+        colocate/evict delta against the previous packing."""
+        prev = self.device_plan
+        if prev is None:
+            prev = self.pack()
+        self.plans[app] = plan
+        self.version += 1
+        new = self.pack()
+        return new, diff_device_plans(prev, new)
+
+
+__all__ = [
+    "AllocatorConfig",
+    "GlobalAllocator",
+    "dedicated_cost",
+    "plan_slots",
+]

@@ -1,0 +1,258 @@
+"""Device-centric plan view: what each *physical* accelerator runs.
+
+Harpagon's `Plan` is module-centric: every module owns a fractional
+machine count per configuration, and nothing says which physical device a
+fractional tail lives on.  That is the right view for the per-app planner
+— and exactly the wrong one for paying the bill: you cannot rent 0.37 of
+a device, so a dedicated per-app deployment pays ``ceil(machines)`` per
+allocation and strands the residue.
+
+The tenancy layer re-expresses a set of per-app plans as a
+:class:`DevicePlan`: a list of :class:`Device`, each a physical
+accelerator of one hardware class hosting one or two :class:`DeviceSlot`
+(MPS-style co-location of module residues).  The view is *derived* —
+every slot corresponds one-to-one to a machine of
+`core.dispatch.machine_fractions` over the plan's allocations, so it
+round-trips back to the module-centric machine multiset exactly — and
+*diffable*: `diff_device_plans` yields the colocate/evict instants the
+observability layer records when an epoch repack changes who shares a
+device with whom.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping
+
+from ...core.profiles import Config
+
+_EPS = 1e-9
+
+
+@dataclass(frozen=True)
+class DeviceSlot:
+    """One module residue (or full cover) placed on a physical device.
+
+    ``fraction`` is the capacity share of the device this slot occupies
+    (1.0 = a full integer-cover machine; <1 = the fractional tail of an
+    allocation).  ``mid`` is the machine id of the corresponding machine
+    in the module's `expand_machines` order — the hook the shared pool
+    uses to stretch exactly this machine's service durations.
+    ``collect_rate`` is the rate the slot's batch fills at (the Theorem-1
+    tail fill rate) and ``budget`` the module's latency budget; both are
+    carried so the allocator's feasibility guard can re-evaluate WCL
+    under interference without reaching back into the plan.
+    """
+
+    app: str
+    module: str
+    config: Config
+    fraction: float
+    mid: int
+    rate: float = 0.0
+    dummy: float = 0.0
+    collect_rate: float = 0.0
+    budget: float = float("inf")
+
+    @property
+    def key(self) -> tuple[str, str, int]:
+        """Stable identity of the underlying machine: (app, module, mid)."""
+        return (self.app, self.module, self.mid)
+
+
+@dataclass(frozen=True)
+class Device:
+    """A physical accelerator hosting up to ``max_coresident`` slots."""
+
+    did: int
+    hardware: str
+    unit_price: float
+    slots: tuple[DeviceSlot, ...]
+    dedicated: bool = False  # feasibility guard forced exclusivity
+
+    @property
+    def occupancy(self) -> float:
+        return sum(s.fraction for s in self.slots)
+
+    @property
+    def shared(self) -> bool:
+        return len(self.slots) > 1
+
+    @property
+    def cost(self) -> float:
+        """A device is paid for whole, however little of it is occupied."""
+        return self.unit_price
+
+    def coresident(self, slot: DeviceSlot) -> float:
+        """The OTHER tenants' occupancy — what slows ``slot`` down."""
+        return max(0.0, self.occupancy - slot.fraction)
+
+
+@dataclass(frozen=True)
+class DevicePlan:
+    """The whole pool: every physical device and what it runs.
+
+    ``cost`` is the honest integer-device bill — the quantity the
+    consolidation story minimizes.  ``version`` counts repacks (epoch
+    arbitration bumps it), mirroring `Plan.version`.
+    """
+
+    devices: tuple[Device, ...]
+    version: int = 0
+    apps: tuple[str, ...] = ()
+
+    @property
+    def cost(self) -> float:
+        return sum(d.cost for d in self.devices)
+
+    @property
+    def n_shared(self) -> int:
+        return sum(1 for d in self.devices if d.shared)
+
+    def occupancy(self) -> dict[int, float]:
+        return {d.did: d.occupancy for d in self.devices}
+
+    def slots_of(self, app: str) -> list[tuple[Device, DeviceSlot]]:
+        return [
+            (d, s) for d in self.devices for s in d.slots if s.app == app
+        ]
+
+    def module_machines(self, app: str) -> dict[str, list[tuple[Config, float]]]:
+        """Round-trip to the module-centric view: per module, the machine
+        multiset ``(config, capacity fraction)`` in machine-id order —
+        comparable 1:1 against ``machine_fractions`` of the plan's
+        allocations."""
+        out: dict[str, list[tuple[Config, float, int]]] = {}
+        for d in self.devices:
+            for s in d.slots:
+                if s.app == app:
+                    out.setdefault(s.module, []).append(
+                        (s.config, s.fraction, s.mid)
+                    )
+        return {
+            m: [(c, f) for c, f, _ in sorted(rows, key=lambda r: r[2])]
+            for m, rows in out.items()
+        }
+
+    def interference_factors(
+        self, model, app: "str | None" = None
+    ) -> dict[tuple[str, str, int], float]:
+        """Per-machine slowdown factors under ``model`` (an
+        `InterferenceModel`): ``(app, module, mid) -> factor`` for every
+        slot sharing its device; slots alone on a device are omitted
+        (factor 1.0 — bit-exact with the profiled duration)."""
+        out: dict[tuple[str, str, int], float] = {}
+        for d in self.devices:
+            if not d.shared:
+                continue
+            for s in d.slots:
+                if app is not None and s.app != app:
+                    continue
+                f = model.slowdown(d.coresident(s), d.hardware)
+                if f > 1.0 + _EPS:
+                    out[(s.app, s.module, s.mid)] = f
+        return out
+
+    def summary(self) -> str:
+        lines = [
+            f"device-plan v{self.version} apps={','.join(self.apps)}"
+            f" devices={len(self.devices)} shared={self.n_shared}"
+            f" cost={self.cost:.4g}"
+        ]
+        for d in self.devices:
+            tag = " [shared]" if d.shared else (
+                " [dedicated]" if d.dedicated else ""
+            )
+            lines.append(
+                f"  dev{d.did}@{d.hardware} occ={d.occupancy:.3g}{tag}"
+            )
+            for s in d.slots:
+                lines.append(
+                    f"    {s.app}/{s.module} b{s.config.batch}"
+                    f" frac={s.fraction:.3g} mid={s.mid}"
+                )
+        return "\n".join(lines)
+
+    def diff(self, other: "DevicePlan") -> "DevicePlanDelta":
+        return diff_device_plans(self, other)
+
+
+def _placements(plan: DevicePlan) -> dict[tuple[str, str, int], tuple[int, tuple]]:
+    """slot key -> (device id, frozenset of co-resident slot keys)."""
+    out = {}
+    for d in plan.devices:
+        keys = [s.key for s in d.slots]
+        for s in d.slots:
+            partners = tuple(sorted(k for k in keys if k != s.key))
+            out[s.key] = (d.did, partners)
+    return out
+
+
+@dataclass(frozen=True)
+class DevicePlanDelta:
+    """What an epoch repack changed, in observability-event terms.
+
+    ``colocated``: slots that now share a device with a partner set they
+    did not have before (new pairings — one ``colocate`` instant each).
+    ``evicted``: slots that lost their shared placement (moved to a
+    dedicated device, repartnered, or left the pool — one ``evict``
+    instant each, recorded against the device they left).
+    """
+
+    version_from: int
+    version_to: int
+    cost_before: float
+    cost_after: float
+    colocated: tuple[tuple[int, tuple[str, str, int]], ...]
+    evicted: tuple[tuple[int, tuple[str, str, int]], ...]
+
+    @property
+    def empty(self) -> bool:
+        return not (self.colocated or self.evicted)
+
+    def summary(self) -> str:
+        head = (
+            f"device-delta v{self.version_from}->v{self.version_to}"
+            f" cost {self.cost_before:.4g}->{self.cost_after:.4g}"
+        )
+        lines = [head]
+        for did, (app, module, mid) in self.colocated:
+            lines.append(f"  colocate dev{did} <- {app}/{module}#{mid}")
+        for did, (app, module, mid) in self.evicted:
+            lines.append(f"  evict dev{did} -> {app}/{module}#{mid}")
+        return "\n".join(lines)
+
+
+def diff_device_plans(prev: DevicePlan, new: DevicePlan) -> DevicePlanDelta:
+    """Pairing-level delta between two packings of the pool."""
+    p0, p1 = _placements(prev), _placements(new)
+    colocated = []
+    evicted = []
+    for key, (did, partners) in p1.items():
+        if not partners:
+            continue
+        before = p0.get(key)
+        if before is None or before[1] != partners:
+            colocated.append((did, key))
+    for key, (did, partners) in p0.items():
+        if not partners:
+            continue
+        after = p1.get(key)
+        if after is None or after[1] != partners:
+            evicted.append((did, key))
+    return DevicePlanDelta(
+        version_from=prev.version,
+        version_to=new.version,
+        cost_before=prev.cost,
+        cost_after=new.cost,
+        colocated=tuple(sorted(colocated)),
+        evicted=tuple(sorted(evicted)),
+    )
+
+
+__all__ = [
+    "Device",
+    "DevicePlan",
+    "DevicePlanDelta",
+    "DeviceSlot",
+    "diff_device_plans",
+]

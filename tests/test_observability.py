@@ -7,7 +7,7 @@ paths); every miss report conserves — cause counts sum exactly to
 ``offered - completed-in-SLO`` — across apps x arrivals x admission x
 control epochs, with each miss carrying exactly one cause; the Perfetto
 export is valid trace-event JSON; the trace ring buffer and deterministic
-sampling behave as documented; the `experimental_relax` chain on/off is
+sampling behave as documented; the `relax` chain on/off is
 bit-identical under burst deadlines (the PR-6 inertness finding the
 rename records); and the BENCH_serving.json writer merges by name into a
 deterministic, schema-versioned document.
@@ -292,7 +292,7 @@ class TestMetrics:
         assert res.metrics.for_module(rows[0]["module"])
 
 
-# --------------------- experimental_relax: scoped inertness (PR-6, revised)
+# ----------------------------- relax: scoped inertness (PR-6, promoted PR-8)
 
 
 class TestExperimentalRelax:
@@ -320,7 +320,7 @@ class TestExperimentalRelax:
                 pipeline=True,
                 control=ControlLoopConfig(
                     interval=n / rate / 4, profiles=PROFILES, margin=0.25,
-                    experimental_relax=relax,
+                    relax=relax,
                 ),
             )
 
@@ -340,7 +340,7 @@ class TestExperimentalRelax:
                 pipeline=True,
                 control=ControlLoopConfig(
                     interval=period / 4, profiles=PROFILES, margin=0.25,
-                    experimental_relax=relax,
+                    relax=relax,
                 ),
             ).miss_report()
 
@@ -351,10 +351,18 @@ class TestExperimentalRelax:
         )
 
     def test_knob_validation(self):
-        with pytest.raises(ValueError, match="experimental_relax_floor"):
-            ControlLoopConfig(interval=1.0, experimental_relax_floor=0.0)
-        with pytest.raises(ValueError, match="experimental_relax_every"):
-            ControlLoopConfig(interval=1.0, experimental_relax_every=0.0)
+        with pytest.raises(ValueError, match="relax_floor"):
+            ControlLoopConfig(interval=1.0, relax_floor=0.0)
+        with pytest.raises(ValueError, match="relax_every"):
+            ControlLoopConfig(interval=1.0, relax_every=0.0)
+
+    def test_deprecated_alias_maps_and_warns(self):
+        with pytest.warns(DeprecationWarning, match="experimental_relax"):
+            cfg = ControlLoopConfig(interval=1.0, experimental_relax=False)
+        assert cfg.relax is False
+        with pytest.warns(DeprecationWarning, match="experimental_relax_tol"):
+            cfg = ControlLoopConfig(interval=1.0, experimental_relax_tol=0.2)
+        assert cfg.relax_tol == 0.2
 
 
 # ------------------------------------------- BENCH_serving.json merge-write
