@@ -555,9 +555,10 @@ class ServingEngine:
         pace = offered_rate if offered_rate is not None else frame_rate
         if ctrl is not None:
             ctrl.reset()
-            # admission emits its own decision-resolution telemetry (every
-            # denial, including interim retry denials the closed loop later
-            # re-admits); the loop's terminal emit defers to it (see
+            # admission emits its own decision-resolution telemetry: every
+            # denial, with interim retry denials the closed loop later
+            # re-admits tagged "shed_retry" (terminal ones "shed"); the
+            # loop's terminal emit defers to it (see
             # `pipeline.core.issue_frame`) so sheds are never double-counted
             ctrl.obs = obs
         perf = dict(

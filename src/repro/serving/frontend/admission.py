@@ -79,11 +79,12 @@ class AdmissionController:
         # passive telemetry sink (`observability.Observability`): both
         # engine paths wire it — the flat path before shed_stream, the
         # pipelined loop before run_pipeline — so every admission denial
-        # lands in the trace/metrics at decision resolution (closed-loop
-        # interim retry denials included); the pipelined loop's terminal
-        # shed emit defers to a wired controller to avoid double counts.
-        # Survives reset() — a reset clears admission state, not the
-        # observer.
+        # lands in the trace/metrics at decision resolution.  Closed-loop
+        # interim denials the client will re-issue carry the distinct
+        # "shed_retry" cause, so summing "shed" instants always equals
+        # terminal sheds; the pipelined loop's terminal shed emit defers
+        # to a wired controller to avoid double counts.  Survives
+        # reset() — a reset clears admission state, not the observer.
         self.obs = None
         self.reset()
 
@@ -117,8 +118,12 @@ class AdmissionController:
             self._finish: deque[float] = deque()
             self._free = 0.0
 
-    def admit(self, t: float) -> bool:
-        """Admit or shed one frame arriving at time ``t`` (non-decreasing)."""
+    def admit(self, t: float, cause: str = "shed") -> bool:
+        """Admit or shed one frame arriving at time ``t`` (non-decreasing).
+
+        ``cause`` labels the observer instant emitted on denial — callers
+        that will re-issue a denied frame pass a non-terminal cause.
+        """
         if isinstance(self.policy, TokenBucket):
             if self._last is not None:
                 self._tokens = min(
@@ -132,7 +137,7 @@ class AdmissionController:
                 return True
             self.shed += 1
             if self.obs is not None:
-                self.obs.shed(t, "shed")
+                self.obs.shed(t, cause)
             return False
         # queue depth: retire virtually-served frames, then check occupancy
         q = self._finish
@@ -141,14 +146,14 @@ class AdmissionController:
         if len(q) >= self.policy.depth:
             self.shed += 1
             if self.obs is not None:
-                self.obs.shed(t, "shed")
+                self.obs.shed(t, cause)
             return False
         self._free = max(self._free, t) + 1.0 / self._drain
         q.append(self._free)
         self.admitted += 1
         return True
 
-    def admit_live(self, t: float, backlog: int) -> bool:
+    def admit_live(self, t: float, backlog: int, cause: str = "shed") -> bool:
         """Admit or shed against *live* pipeline state (event-interleaved).
 
         ``backlog`` is the caller-observed ingress occupancy at time ``t`` —
@@ -164,11 +169,11 @@ class AdmissionController:
         in the flat path's virtual queue).
         """
         if isinstance(self.policy, TokenBucket):
-            return self.admit(t)
+            return self.admit(t, cause)
         if backlog >= self.policy.depth:
             self.shed += 1
             if self.obs is not None:
-                self.obs.shed(t, "shed")
+                self.obs.shed(t, cause)
             return False
         self.admitted += 1
         return True

@@ -123,7 +123,12 @@ def closed_loop_ingress(
             next_frame += 1
             tries = 0
         attempts += 1
-        admitted = admission.admit(t) if admission is not None else True
+        will_retry = cfg.retry_on_shed and tries < cfg.max_retries
+        admitted = (
+            admission.admit(t, "shed_retry" if will_retry else "shed")
+            if admission is not None
+            else True
+        )
         if admitted:
             issue[frame] = t
             done = t + max(float(latency[frame]), 0.0)

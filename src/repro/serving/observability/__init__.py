@@ -116,7 +116,13 @@ class Observability:
             tr.counter(t, module, "queue_depth", depth)
 
     def shed(self, t: float, kind: str) -> None:
-        """An admission decision dropped a frame (``kind``: shed/retry_drop)."""
+        """An admission decision denied a frame.
+
+        ``kind``: ``"shed"`` (terminal), ``"shed_retry"`` (interim
+        closed-loop denial the client re-issues), or ``"pipeline_drop"``
+        (an in-flight instance drop lost the frame).  Summing ``"shed"``
+        instants over a run equals terminal ``ServeResult.shed``.
+        """
         if self.metrics is not None:
             self.metrics.close("(ingress)", kind, 0)
         if self.trace is not None:

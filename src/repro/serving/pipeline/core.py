@@ -409,7 +409,17 @@ def run_pipeline(
             backlog = sum(
                 stages[src].backlog + len(stages[src].parked) for src in sources
             )
-            admitted = admission.admit_live(t, backlog)
+            # interim denials the closed-loop client will re-issue are
+            # tagged "shed_retry", never "shed": trace/metrics "shed"
+            # instants stay summable as terminal sheds in both loop shapes
+            will_retry = (
+                clients is not None
+                and clients.retry_on_shed
+                and tries < clients.max_retries
+            )
+            admitted = admission.admit_live(
+                t, backlog, cause="shed_retry" if will_retry else "shed"
+            )
         else:
             admitted = True
         if admitted:
@@ -439,9 +449,10 @@ def run_pipeline(
         issue_t[f] = t
         shed[f] = True
         if obs is not None and (admission is None or admission.obs is None):
-            # a wired admission controller already emitted this denial (at
-            # decision resolution — interim retry denials included); only
-            # emit here when the terminal shed would otherwise go unseen
+            # a wired admission controller already emitted this terminal
+            # denial at decision resolution (interim retry denials carry
+            # the distinct "shed_retry" cause); only emit here when the
+            # terminal shed would otherwise go unseen
             obs.shed(t, "shed")
         resolve_shed(f, t)
 

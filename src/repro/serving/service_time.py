@@ -160,7 +160,10 @@ class InterferenceServiceTime(ServiceTimeSource):
         for k, s in factors.items():
             if s < 1.0 - 1e-12:
                 raise ValueError(f"slowdown factors must be >= 1 ({k!r}: {s})")
-        self.factors = dict(factors)
+        # held by reference, never copied: the shared-pool repack hook
+        # mutates the caller's mapping in place and the next batch start
+        # must see the post-repack slowdowns
+        self.factors = factors
         self.base = base
 
     def duration(self, module: str, machine: Machine, n_members: int) -> float:

@@ -19,9 +19,10 @@ import pytest
 
 from repro.core import Planner
 from repro.core import baselines as B
-from repro.core.dispatch import machine_fractions
+from repro.core.dispatch import expand_machines, machine_fractions
 from repro.profiling.interference import InterferenceModel, calibrate
 from repro.serving import (
+    ClosedLoopClients,
     ControlLoopConfig,
     FrontendConfig,
     InterferenceServiceTime,
@@ -108,6 +109,22 @@ class TestInterference:
         assert all(f > 1.0 for f in factors.values())
         with pytest.raises(ValueError):
             InterferenceServiceTime({("m", 0): 0.5})
+
+    def test_factors_mapping_held_live(self):
+        """The factors dict is held by reference: the pool's repack hook
+        mutates it in place and the next duration() must see the change."""
+        plan = pool_plans()["traffic"]
+        module, sched = next(iter(plan.schedules.items()))
+        mach = expand_machines(list(sched.allocs))[0]
+        factors: dict = {}
+        src = InterferenceServiceTime(factors)
+        assert src.duration(module, mach, 1) == mach.config.duration
+        factors[(module, mach.mid)] = 2.0
+        assert src.duration(module, mach, 1) == pytest.approx(
+            2.0 * mach.config.duration
+        )
+        factors.clear()  # eviction: the slowdown must go away too
+        assert src.duration(module, mach, 1) == mach.config.duration
 
 
 # ------------------------------------------------- device plan round-trip
@@ -295,6 +312,51 @@ class TestSharedPool:
         names = [e[4] for e in res.trace.events() if e[0] == 1]
         assert "colocate" in names
 
+    def test_repack_factors_reach_batch_durations(self):
+        """The pool's repack mechanism end-to-end: an ``on_swap`` in-place
+        mutation of the factors mapping changes the durations of batches
+        started *after* the swap (regression: a copied mapping silently
+        froze the initial-pack factors forever)."""
+        plan = pool_plans()["traffic"]
+        wl = plan.workload
+        rate = wl.rates[wl.app.modules[0]]
+        log: list = []
+
+        class Recording(InterferenceServiceTime):
+            def duration(self, module, machine, n_members):
+                d = super().duration(module, machine, n_members)
+                log.append((machine.config.duration, d))
+                return d
+
+        factors: dict = {}
+
+        def on_swap(t, new_plan):
+            factors.clear()
+            factors.update({
+                (m, mm.mid): 3.0
+                for m, s in new_plan.schedules.items()
+                for mm in expand_machines(list(s.allocs))
+            })
+            log.append("swap")
+
+        res = ServingEngine(plan).run(
+            600, rate,
+            arrivals="poisson",
+            offered_rate=rate * 1.6,
+            control=ControlLoopConfig(
+                interval=5.0, profiles=PROFILES, on_swap=on_swap
+            ),
+            service_time=Recording(factors),
+            pipeline=True,
+        )
+        assert "swap" in log  # the control loop swapped at least once
+        pre = log[: log.index("swap")]
+        assert all(d == base for base, d in pre)  # no slowdown before swaps
+        post = [e for e in log[log.index("swap"):] if e != "swap"]
+        assert any(
+            d == pytest.approx(3.0 * base) for base, d in post
+        )  # post-swap batch starts read the mutated factors
+
 
 # ------------------------- satellite: pipeline-path admission shed events
 
@@ -316,3 +378,25 @@ class TestPipelineShedTelemetry:
         # wired at decision resolution, no double count with the loop's
         # terminal emit: open loop has exactly one decision per shed frame
         assert n_inst == res.shed
+
+    def test_closed_loop_shed_instants_match_terminal(self):
+        """Closed loop: interim denials the client re-issues are tagged
+        "shed_retry", so "shed" instants stay summable as terminal sheds."""
+        plan = Planner(B.HARPAGON).plan(
+            make_workload(app_by_name("traffic"), 100.0, 2.0), PROFILES
+        )
+        res = ServingEngine(plan).run(
+            600, 100.0,
+            frontend=FrontendConfig(
+                admission=TokenBucket(rate=60.0, burst=2.0),
+                clients=ClosedLoopClients(
+                    n_clients=64, retry_on_shed=True, max_retries=2,
+                    backoff=0.01,
+                ),
+            ),
+            pipeline=True, observability=True,
+        )
+        names = [e[4] for e in res.trace.events() if e[0] == 1]
+        assert res.shed > 0
+        assert names.count("shed_retry") > 0  # interim denials are distinct
+        assert names.count("shed") == res.shed
