@@ -38,16 +38,19 @@ def _module_cost_curve(
     # Budgets where the cost can change: each config's wcl is a breakpoint.
     # Evaluating every grid point is O(nq * |configs|); dedupe identical
     # feasible-sets by walking the grid and reusing the previous result when
-    # no breakpoint was crossed.
+    # no breakpoint was crossed.  The per-config WCL is L-independent, so
+    # one batched call replaces the nq * |configs| scalar evaluations.
     prev_feasible_key: tuple[bool, ...] | None = None
     prev_cost = INF
-    from .scheduler import get_wcl
+    from .dispatch import config_arrays
+    from .scheduler import get_wcl_batch
+
+    arrs = config_arrays(profile.configs)
+    wcl_arr = get_wcl_batch(arrs, policy, T, full=T >= arrs.throughput)
 
     for k in range(1, nq + 1):
         L = k * q
-        key = tuple(
-            get_wcl(c, policy, T, full=T >= c.throughput) <= L for c in profile.configs
-        )
+        key = tuple((wcl_arr <= L).tolist())
         if key == prev_feasible_key:
             cost[k] = prev_cost
             continue
@@ -86,6 +89,61 @@ def _dp(sp: SP, nq: int, curves: Mapping[str, list[float]]) -> list[float]:
     return [sum(p[k] for p in parts) for k in range(nq + 1)]
 
 
+def _assign(sp: SP, k: int, nq: int, curves: Mapping[str, list[float]]) -> dict[str, int]:
+    """Recover per-module grid budgets from the DP optimum at total ``k``.
+
+    Mirrors the DP's composition: a Par node hands every branch the whole
+    budget; a Series node re-runs the pairwise min-plus combination
+    tracking the split point.  A leaf shrinks its budget to the *first*
+    grid point achieving the (monotonized) curve value — the budget whose
+    actual schedule realizes that cost, which also leaves the reassigner
+    the largest end-to-end gap.
+    """
+    if isinstance(sp, Leaf):
+        curve = curves[sp.name]
+        if curve[k] == INF:
+            return {sp.name: k}
+        while k > 0 and curve[k - 1] == curve[k]:
+            k -= 1
+        return {sp.name: k}
+    if isinstance(sp, Par):
+        out: dict[str, int] = {}
+        for p in sp.parts:
+            out.update(_assign(p, k, nq, curves))
+        return out
+    out = {}
+    rem = k
+    for i, p in enumerate(sp.parts):
+        if i == len(sp.parts) - 1:
+            out.update(_assign(p, rem, nq, curves))
+            break
+        head = _dp(p, nq, curves)
+        tail = _dp(Series(sp.parts[i + 1:]), nq, curves)
+        best_a, best_v = 0, INF
+        for a in range(rem + 1):
+            v = head[a] + tail[rem - a]
+            if v < best_v - 1e-15:
+                best_v, best_a = v, a
+        out.update(_assign(p, best_a, nq, curves))
+        rem -= best_a
+    return out
+
+
+def _curves(
+    wl: Workload,
+    profiles: Mapping[str, ModuleProfile],
+    policy: Policy,
+    n_grid: int,
+    use_dummy: bool,
+) -> Mapping[str, list[float]]:
+    return {
+        m: _module_cost_curve(
+            m, wl.rates[m], wl.slo, n_grid, profiles[m], policy, use_dummy
+        )
+        for m in wl.app.modules
+    }
+
+
 def optimal_cost(
     wl: Workload,
     profiles: Mapping[str, ModuleProfile],
@@ -94,11 +152,27 @@ def optimal_cost(
     use_dummy: bool = True,
 ) -> float:
     """Exhaustive-split optimal serving cost (INF if the SLO is unsatisfiable)."""
-    curves = {
-        m: _module_cost_curve(
-            m, wl.rates[m], wl.slo, n_grid, profiles[m], policy, use_dummy
-        )
-        for m in wl.app.modules
-    }
+    curves = _curves(wl, profiles, policy, n_grid, use_dummy)
     dp = _dp(wl.app.sp, n_grid, curves)
     return dp[n_grid]
+
+
+def optimal_split(
+    wl: Workload,
+    profiles: Mapping[str, ModuleProfile],
+    policy: Policy = Policy.TC,
+    n_grid: int = 240,
+    use_dummy: bool = True,
+) -> dict[str, float] | None:
+    """Per-module budgets realizing `optimal_cost`'s optimum (None if the
+    SLO is unsatisfiable on the grid).  Backs `splitter.split_dp`: the
+    planner schedules each module at the recovered budget with the same
+    scheduler the curves were priced with, so the resulting plan's cost is
+    the DP optimum (before the reassigner, which can only reduce it)."""
+    curves = _curves(wl, profiles, policy, n_grid, use_dummy)
+    dp = _dp(wl.app.sp, n_grid, curves)
+    if dp[n_grid] == INF:
+        return None
+    q = wl.slo / n_grid
+    ks = _assign(wl.app.sp, n_grid, n_grid, curves)
+    return {m: ks[m] * q for m in wl.app.modules}

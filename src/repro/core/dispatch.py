@@ -118,6 +118,110 @@ class Alloc:
         return f"{self.rate:.6g}{dm} ({self.machines:.3g} x b{self.config.batch}@{self.config.hardware}{hr})"
 
 
+@dataclass(frozen=True, eq=False)
+class ConfigArrays:
+    """Columnar (numpy) view of a configuration table.
+
+    The batched WCL kernel (`config_wcl_batch`) evaluates Theorem 1 over a
+    whole profile at once instead of one scalar `config_wcl` call per
+    config.  ``throughput``/``ratio`` are materialized from the scalar
+    `Config` properties so the array entries are the *same doubles* the
+    scalar path computes — elementwise IEEE-754 arithmetic on them is then
+    bit-identical to the scalar cascade.
+    """
+
+    configs: tuple[Config, ...]
+    duration: np.ndarray
+    batch: np.ndarray
+    throughput: np.ndarray
+    unit_price: np.ndarray
+    ratio: np.ndarray
+
+    @classmethod
+    def build(cls, configs) -> "ConfigArrays":
+        configs = tuple(configs)
+        return cls(
+            configs=configs,
+            duration=np.array([c.duration for c in configs], dtype=np.float64),
+            batch=np.array([float(c.batch) for c in configs], dtype=np.float64),
+            throughput=np.array([c.throughput for c in configs], dtype=np.float64),
+            unit_price=np.array([c.unit_price for c in configs], dtype=np.float64),
+            ratio=np.array([c.ratio for c in configs], dtype=np.float64),
+        )
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+    def tail(self, k: int) -> "ConfigArrays":
+        """View of configs[k:] (numpy slices are views — no copy)."""
+        return ConfigArrays(
+            self.configs[k:],
+            self.duration[k:],
+            self.batch[k:],
+            self.throughput[k:],
+            self.unit_price[k:],
+            self.ratio[k:],
+        )
+
+
+# id-keyed ConfigArrays cache.  Keying by ``id(configs)`` skips re-hashing
+# the config tuple on every lookup (a tuple hash walks every frozen
+# dataclass); storing the tuple in the value keeps it alive, so its id can
+# never be reused while the entry exists.
+_ARRAYS_CACHE: "dict[int, tuple[tuple, ConfigArrays]]" = {}
+
+
+def config_arrays(configs: "tuple[Config, ...]") -> ConfigArrays:
+    """Cached columnar view of a profile's config tuple."""
+    key = id(configs)
+    hit = _ARRAYS_CACHE.get(key)
+    if hit is not None and hit[0] is configs:
+        return hit[1]
+    arrs = ConfigArrays.build(configs)
+    if len(_ARRAYS_CACHE) > 4096:
+        _ARRAYS_CACHE.clear()
+    _ARRAYS_CACHE[key] = (configs, arrs)
+    return arrs
+
+
+def config_wcl_batch(
+    arrs: ConfigArrays,
+    policy: Policy,
+    *,
+    collect_rate,
+    full=True,
+    burst: float = 0.0,
+) -> np.ndarray:
+    """Elementwise `config_wcl` over a whole config table in one call.
+
+    ``collect_rate`` may be a scalar (one rate for every config) or an
+    array (one rate per config); ``full`` likewise a bool or bool array.
+    Branches mirror the scalar kernel exactly — same operations in the
+    same order on the same doubles — so the result is bit-identical to
+    calling `config_wcl` per row (the scalar path stays as the
+    bit-exactness oracle behind ``PlannerOptions.vectorized=False``).
+    """
+    d, b = arrs.duration, arrs.batch
+    if policy is Policy.DT_OPT:
+        return d + b / arrs.throughput  # == 2d, optimistic on partials
+    cr = collect_rate
+    if isinstance(cr, np.ndarray):
+        starved = cr <= _EPS
+        gen = d + b / np.where(starved, 1.0, cr) + burst
+        gen = np.where(starved, math.inf, gen)
+    elif cr <= _EPS:
+        gen = np.full_like(d, math.inf)
+    else:
+        gen = d + b / cr + burst
+    if policy in (Policy.RR, Policy.DT):
+        if full is True:
+            return 2.0 * d  # RR: local collection at own throughput; DT: d + b/t
+        if full is False:
+            return gen
+        return np.where(full, 2.0 * d, gen)
+    return gen  # TC: Theorem 1 at the remaining workload
+
+
 def total_cost(allocs: list[Alloc]) -> float:
     return sum(a.cost for a in allocs)
 

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import math
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field, replace
 from typing import Mapping
 
@@ -31,7 +32,7 @@ class PlannerOptions:
     name: str = "harpagon"
     policy: Policy = Policy.TC
     k_tuples: int | None = None          # None = multi-tuple (Algorithm 1)
-    split: str = "lc"                    # lc | throughput | even | quantized
+    split: str = "lc"                    # lc | throughput | even | quantized | dp
     quantize: float = 0.01               # interval for split="quantized"
     node_merge: bool = True
     cost_direct: bool = True
@@ -50,6 +51,13 @@ class PlannerOptions:
     #   tail feasibility is checked at d + b/w + burst, so the scheduler
     #   places tails that hold their budget under batched hand-off.  Off =
     #   paper semantics (golden equivalence).
+    vectorized: bool = True              # batched numpy WCL cascade: Algorithm
+    #   1's config walk, the dummy generator and the whole splitter evaluate
+    #   candidate (config, remaining-workload) tuples as arrays in one
+    #   `config_wcl_batch` call instead of memoized scalar `config_wcl`
+    #   cascades.  Plans are bit-identical either way; False selects the
+    #   scalar reference path (the bit-exactness oracle), which runs under
+    #   `dispatch.wcl_memo`.
 
 
 @dataclass(frozen=True)
@@ -297,15 +305,26 @@ class Planner:
                 node_merge=o.node_merge,
                 cost_direct=o.cost_direct,
                 integer_tails=split == "lc_int",
+                vectorized=o.vectorized,
             )
         if split == "throughput":
-            return sp.split_throughput(wl, profiles, o.policy)
+            return sp.split_throughput(
+                wl, profiles, o.policy, vectorized=o.vectorized
+            )
         if split in ("even", "even_int"):
             return sp.split_even(
-                wl, profiles, o.policy, integer_tails=split == "even_int"
+                wl, profiles, o.policy, integer_tails=split == "even_int",
+                vectorized=o.vectorized,
             )
         if split == "quantized":
-            return sp.split_quantized(wl, profiles, o.policy, q=o.quantize)
+            return sp.split_quantized(
+                wl, profiles, o.policy, q=o.quantize, vectorized=o.vectorized
+            )
+        if split == "dp":
+            return sp.split_dp(
+                wl, profiles, o.policy,
+                use_dummy=o.use_dummy and o.k_tuples is None,
+            )
         raise ValueError(f"unknown splitter {split}")
 
     # -- full pipeline ---------------------------------------------------------
@@ -315,25 +334,30 @@ class Planner:
         Per the paper (Fig. 3) the module scheduler and latency splitter
         iterate: when the LC split's fractionally-tight budgets turn out to
         be integer-unschedulable, Harpagon retries with progressively looser
-        splitting strategies and keeps the cheapest feasible plan.  The
-        whole cascade runs under one `dispatch.wcl_memo` scope: every tier
-        re-evaluates largely the same ``(config, rate, burst)`` WCL tuples
-        (Algorithm 1's greedy walk, the dummy generator's re-runs, the
-        reassigner's module sweep), which the memo collapses to dict hits —
-        the "millisecond-level planning" claim is tracked by the
-        ``planner_speed`` benchmark row.
+        splitting strategies and keeps the cheapest feasible plan.  On the
+        default ``vectorized`` path every tier evaluates its candidate
+        (config, remaining-workload) tuples with the batched WCL kernel
+        (`dispatch.config_wcl_batch`); the scalar oracle path
+        (``vectorized=False``) instead runs the whole cascade under one
+        `dispatch.wcl_memo` scope, which collapses its repeated scalar
+        ``(config, rate, burst)`` WCL tuples to dict hits — the
+        "millisecond-level planning" claim is tracked (and smoke-gated) by
+        the ``planner_speed`` benchmark row.
         """
         t0 = time.perf_counter()
         o = self.options
         best: Plan | None = None
+        restricted = self._profiles(profiles)
+        if restricted is None:
+            return Plan(wl, o, {}, False, time.perf_counter() - t0)
         cascade = [o.split]
         if o.split == "lc":
             # schedule-aware refinement (paper Fig. 3's scheduler<->splitter
             # iteration): looser heuristics + integer-tail-aware budgets
             cascade += ["throughput", "lc_int", "even_int"]
-        with wcl_memo():
+        with nullcontext() if o.vectorized else wcl_memo():
             for split in cascade:
-                plan = self._plan_with_split(wl, profiles, split, t0)
+                plan = self._plan_with_split(wl, restricted, split, t0)
                 if plan.feasible and (best is None or plan.cost < best.cost - 1e-12):
                     best = plan
         if best is not None:
@@ -343,14 +367,12 @@ class Planner:
     def _plan_with_split(
         self,
         wl: Workload,
-        profiles: Mapping[str, ModuleProfile],
+        restricted: Mapping[str, ModuleProfile],
         split: str,
         t0: float,
     ) -> Plan:
+        """One cascade tier over already-restricted profiles (`_profiles`)."""
         o = self.options
-        restricted = self._profiles(profiles)
-        if restricted is None:
-            return Plan(wl, o, {}, False, time.perf_counter() - t0)
         budgets = self._split_with(wl, restricted, split)
         if budgets is None:
             return Plan(wl, o, {}, False, time.perf_counter() - t0)
@@ -372,6 +394,7 @@ class Planner:
                 k_tuples=o.k_tuples,
                 headroom=o.headroom,
                 burst=burst,
+                vectorized=o.vectorized,
             )
             if s is None and gap > _EPS:
                 # fallback: spend the global slack on this module's budget
@@ -385,6 +408,7 @@ class Planner:
                     k_tuples=o.k_tuples,
                     headroom=o.headroom,
                     burst=burst,
+                    vectorized=o.vectorized,
                 )
                 if s is not None:
                     gap = max(0.0, gap - max(0.0, s.wcl - budgets[m]))
@@ -441,6 +465,7 @@ class Planner:
                     s.rate + s.dummy, s.budget, gap, profiles[m], list(s.allocs),
                     o.policy, headroom=o.headroom,
                     burst=self._burst_of(wl, schedules, m),
+                    vectorized=o.vectorized,
                 )
                 cand = replace(s, allocs=tuple(new_allocs))
                 dcost = s.cost - cand.cost
@@ -498,7 +523,7 @@ class Planner:
         rate-drift test alone would happily reuse an allocation sized under
         the stale durations.
         """
-        with wcl_memo():
+        with nullcontext() if self.options.vectorized else wcl_memo():
             return self._replan_impl(
                 prev, new_rates, profiles, tolerance=tolerance,
                 cost_guard=cost_guard, force=frozenset(force),
@@ -552,11 +577,15 @@ class Planner:
                 runtime_s=time.perf_counter() - t0,
             )
 
+        restricted = self._profiles(profiles)
+
         def single_split() -> Plan:
             # cheap cold tier: one pass of the configured split (it re-derives
             # the budgets, which is the one thing warm repair keeps stale)
+            if restricted is None:
+                return _restamp(Plan(wl, o, {}, False, 0.0))
             return _restamp(
-                self._plan_with_split(wl, profiles, o.split, time.perf_counter())
+                self._plan_with_split(wl, restricted, o.split, time.perf_counter())
             )
 
         def cold() -> Plan:
@@ -567,7 +596,6 @@ class Planner:
 
         if not prev.feasible:
             return _memo(cold())
-        restricted = self._profiles(profiles)
         if restricted is None:
             return _memo(cold())
         schedules: dict[str, ModuleSchedule] = {}
@@ -594,6 +622,7 @@ class Planner:
                 k_tuples=o.k_tuples,
                 headroom=o.headroom,
                 burst=self._burst_of(wl, schedules, m),
+                vectorized=o.vectorized,
             )
             if s is None:
                 return _memo(cold())

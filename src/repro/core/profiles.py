@@ -68,7 +68,14 @@ class ModuleProfile:
         max_batch: int | None = None,
         hardware: Sequence[str] | None = None,
     ) -> "ModuleProfile":
-        """Filtered copy (used by ablations Harp-nb / Harp-nhc / Harp-nhe)."""
+        """Filtered copy (used by ablations Harp-nb / Harp-nhc / Harp-nhe).
+
+        Unfiltered calls return ``self``: the planner restricts profiles on
+        every `plan()`, and a stable ``configs`` tuple identity keeps the
+        batched-WCL array caches (keyed by that identity) hot across calls.
+        """
+        if max_batch is None and hardware is None:
+            return self
         cfgs = [
             c
             for c in self.configs

@@ -62,6 +62,7 @@ def apply_dummy(
     *,
     headroom: float = 0.0,
     burst: float = 0.0,
+    vectorized: bool = True,
 ) -> tuple[float, list[Alloc]]:
     """Try Theorem-2 dummy padding; returns (dummy_rate, allocs) of the best result."""
     best_cost = total_cost(allocs)
@@ -72,7 +73,8 @@ def apply_dummy(
         if dum <= _EPS or u <= _EPS:
             continue  # nothing below this config, or already saturated
         ok, cand = generate_config(
-            T + dum, L, profile, policy, headroom=headroom, burst=burst
+            T + dum, L, profile, policy, headroom=headroom, burst=burst,
+            vectorized=vectorized,
         )
         if ok and total_cost(cand) < best_cost - 1e-12:
             best_cost = total_cost(cand)
@@ -90,6 +92,7 @@ def apply_reassign(
     *,
     headroom: float = 0.0,
     burst: float = 0.0,
+    vectorized: bool = True,
 ) -> tuple[list[Alloc], float]:
     """Re-run Algorithm 1 on the residual workload with budget ``L + extra``.
 
@@ -105,7 +108,8 @@ def apply_reassign(
         return allocs, 0.0
     base_cost = total_cost(allocs)
     ok, cand = generate_config(
-        residual_rate, L + extra, profile, policy, headroom=headroom, burst=burst
+        residual_rate, L + extra, profile, policy, headroom=headroom, burst=burst,
+        vectorized=vectorized,
     )
     if not ok:
         return allocs, 0.0
@@ -128,6 +132,7 @@ def schedule_module(
     k_tuples: int | None = None,
     headroom: float = 0.0,
     burst: float = 0.0,
+    vectorized: bool = True,
 ) -> ModuleSchedule | None:
     """Algorithm 1 (+ optional dummy generator) for one module.
 
@@ -138,14 +143,20 @@ def schedule_module(
     from .scheduler import generate_config_ktuple  # local: avoid cycle
 
     if k_tuples is None:
-        ok, allocs = generate_config(T, L, profile, policy, headroom=headroom, burst=burst)
+        ok, allocs = generate_config(
+            T, L, profile, policy, headroom=headroom, burst=burst,
+            vectorized=vectorized,
+        )
     else:
-        ok, allocs = generate_config_ktuple(T, L, profile, policy, k_tuples)
+        ok, allocs = generate_config_ktuple(
+            T, L, profile, policy, k_tuples, vectorized=vectorized
+        )
     if not ok:
         return None
     dummy = 0.0
     if use_dummy and k_tuples is None:
         dummy, allocs = apply_dummy(
-            T, L, profile, allocs, policy, headroom=headroom, burst=burst
+            T, L, profile, allocs, policy, headroom=headroom, burst=burst,
+            vectorized=vectorized,
         )
     return ModuleSchedule(module, T, dummy, L, tuple(allocs), policy)

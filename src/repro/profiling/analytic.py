@@ -1,7 +1,7 @@
 """Analytic model accounting and the analytic TPU profiler.
 
 One module for the whole analytic chain (merged from the former
-``profiling.analytics``, which now re-exports from here):
+``profiling.analytics``; its re-export shim was dropped in PR 9):
 
 * parameter / FLOPs / KV-cache accounting per assigned architecture
   (MODEL_FLOPS = 6 N D for training, 2 N_active per token for inference),

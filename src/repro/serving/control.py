@@ -30,7 +30,6 @@ provisioning.
 from __future__ import annotations
 
 import math
-import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Mapping, Sequence
@@ -95,8 +94,8 @@ class ControlLoopConfig:
     9600-frame scale — relaxation cut total misses by up to 38% at
     coarse replan intervals (P/48: 493 vs 794 misses at seed 0,
     2162 vs 2558 at seed 1) and never measured worse.  The old
-    ``experimental_relax*`` names are accepted as deprecated aliases
-    for one release cycle.
+    ``experimental_relax*`` alias names were removed in PR 9 after
+    their one-cycle deprecation window.
     """
 
     interval: float
@@ -115,12 +114,6 @@ class ControlLoopConfig:
     relax_tol: float = 0.1
     relax_floor: float = 0.3
     relax_every: float = 0.25
-    # deprecated aliases for the relax knobs (pre-promotion names);
-    # non-None values win over the new fields and raise DeprecationWarning
-    experimental_relax: "bool | None" = None
-    experimental_relax_tol: "float | None" = None
-    experimental_relax_floor: "float | None" = None
-    experimental_relax_every: "float | None" = None
     # multi-tenant arbitration: called as ``on_swap(t, new_plan)`` after a
     # committed plan hot-swap, so a shared-pool allocator can repack the
     # device pool around this tenant's new module-centric plan (see
@@ -128,15 +121,6 @@ class ControlLoopConfig:
     on_swap: "Callable[[float, Plan], None] | None" = None
 
     def __post_init__(self):
-        for old in ("relax", "relax_tol", "relax_floor", "relax_every"):
-            val = getattr(self, f"experimental_{old}")
-            if val is not None:
-                warnings.warn(
-                    f"experimental_{old} is deprecated; use {old}",
-                    DeprecationWarning,
-                    stacklevel=3,
-                )
-                object.__setattr__(self, old, val)
         if self.interval <= 0.0:
             raise ValueError("control interval must be positive")
         if self.window is not None and self.window <= 0.0:

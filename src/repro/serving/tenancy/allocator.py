@@ -45,7 +45,15 @@ import math
 from dataclasses import dataclass
 from typing import Mapping
 
-from ...core.dispatch import Alloc, Policy, config_wcl, machine_fractions
+import numpy as np
+
+from ...core.dispatch import (
+    Alloc,
+    ConfigArrays,
+    Policy,
+    config_wcl_batch,
+    machine_fractions,
+)
 from ...core.harpagon import Plan
 from ...profiling.interference import InterferenceModel
 from .device import Device, DevicePlan, DevicePlanDelta, DeviceSlot, diff_device_plans
@@ -148,15 +156,37 @@ class GlobalAllocator:
 
     # -- guard ---------------------------------------------------------------
 
-    def _inflated_wcl(self, slot: DeviceSlot, coresident: float) -> float:
+    def _inflated_wcls(
+        self, slots: "list[DeviceSlot]", occ: float
+    ) -> "list[float]":
+        """Theorem-1 WCLs of ``slots`` co-resident on one device at total
+        occupancy ``occ``, each inflated by the interference model at its
+        partners' occupancy (``occ - fraction``).  One batched
+        `config_wcl_batch` call per dispatch policy present (apps can run
+        different policies), instead of a scalar `config_wcl` per slot."""
         model = self.cfg.interference
-        policy = self.plans[slot.app].options.policy
-        cfg = slot.config if model is None else model.inflate(
-            slot.config, coresident
-        )
-        return config_wcl(
-            cfg, policy, collect_rate=slot.collect_rate, full=False
-        )
+        out = [0.0] * len(slots)
+        by_policy: "dict[Policy, list[int]]" = {}
+        for i, s in enumerate(slots):
+            pol = self.plans[s.app].options.policy
+            by_policy.setdefault(pol, []).append(i)
+        for policy, idxs in by_policy.items():
+            cfgs = tuple(
+                slots[i].config
+                if model is None
+                else model.inflate(slots[i].config, occ - slots[i].fraction)
+                for i in idxs
+            )
+            rates = np.array([slots[i].collect_rate for i in idxs])
+            wcls = config_wcl_batch(
+                ConfigArrays.build(cfgs), policy, collect_rate=rates, full=False
+            )
+            for j, i in enumerate(idxs):
+                out[i] = float(wcls[j])
+        return out
+
+    def _inflated_wcl(self, slot: DeviceSlot, coresident: float) -> float:
+        return self._inflated_wcls([slot], coresident + slot.fraction)[0]
 
     def _e2e_ok(self, overrides: "dict[tuple[str, str], float]") -> bool:
         """Do the affected apps hold their SLO with these WCL overrides
@@ -186,8 +216,8 @@ class GlobalAllocator:
         if not c.guard or c.interference is None:
             return True
         overrides: dict[tuple[str, str], float] = {}
-        for s in members + [cand]:
-            w = self._inflated_wcl(s, occ - s.fraction)
+        group = members + [cand]
+        for s, w in zip(group, self._inflated_wcls(group, occ)):
             key = (s.app, s.module)
             overrides[key] = max(overrides.get(key, 0.0), w)
         return self._e2e_ok(overrides)
@@ -199,8 +229,7 @@ class GlobalAllocator:
         occ = sum(s.fraction for s in members)
         if len(members) < 2:
             return
-        for s in members:
-            w = self._inflated_wcl(s, occ - s.fraction)
+        for s, w in zip(members, self._inflated_wcls(members, occ)):
             key = (s.app, s.module)
             self._wcl[key] = max(self._wcl.get(key, 0.0), w)
 

@@ -356,13 +356,19 @@ class TestExperimentalRelax:
         with pytest.raises(ValueError, match="relax_every"):
             ControlLoopConfig(interval=1.0, relax_every=0.0)
 
-    def test_deprecated_alias_maps_and_warns(self):
-        with pytest.warns(DeprecationWarning, match="experimental_relax"):
-            cfg = ControlLoopConfig(interval=1.0, experimental_relax=False)
-        assert cfg.relax is False
-        with pytest.warns(DeprecationWarning, match="experimental_relax_tol"):
-            cfg = ControlLoopConfig(interval=1.0, experimental_relax_tol=0.2)
-        assert cfg.relax_tol == 0.2
+    def test_deprecated_aliases_removed(self):
+        # The experimental_relax* aliases served their one-release
+        # deprecation window (promoted in PR 8, dropped in PR 9): passing
+        # them must now fail loudly instead of silently mapping.
+        for kw in (
+            "experimental_relax",
+            "experimental_relax_tol",
+            "experimental_relax_floor",
+            "experimental_relax_every",
+        ):
+            with pytest.raises(TypeError):
+                ControlLoopConfig(interval=1.0, **{kw: 0.2})
+        assert not hasattr(ControlLoopConfig(interval=1.0), "experimental_relax")
 
 
 # ------------------------------------------- BENCH_serving.json merge-write

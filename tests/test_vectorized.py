@@ -1,0 +1,263 @@
+"""Batched planner core vs the scalar oracle.
+
+The vectorized Algorithm-1 cascade (`config_wcl_batch` / `get_wcl_batch` /
+the `_VecState` splitter) must be *bit-identical* to the scalar path it
+replaced — not merely close: the scalar cascade is the reference
+implementation of the paper's Theorem 1 / Algorithm 1, and `PlannerOptions
+(vectorized=False)` is kept exactly so that equality stays testable.
+
+Three layers of pinning:
+
+* property tests: elementwise `config_wcl_batch == config_wcl` and
+  `get_wcl_batch == get_wcl` across policies x full/partial x headroom x
+  burst (hypothesis-driven when available, a dense fixed grid otherwise);
+* plan-level: `vectorized=True` and `False` produce bit-equal plans
+  (feasibility, cost, per-module schedules) over the benchmark workload
+  suite, for every splitter and policy;
+* DP splitter: `split="dp"` realizes `bruteforce.optimal_cost`'s optimum
+  on every feasible workload of the check suite.
+"""
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.dispatch import (
+    ConfigArrays,
+    Policy,
+    config_wcl,
+    config_wcl_batch,
+)
+from repro.core.harpagon import Planner, PlannerOptions
+from repro.core.profiles import Config
+from repro.core.scheduler import get_wcl, get_wcl_batch
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import PROFILES, workload_suite  # noqa: E402
+
+POLICIES = (Policy.TC, Policy.RR, Policy.DT, Policy.DT_OPT)
+
+
+def _configs(batches, durations, prices):
+    return tuple(
+        Config(b, d, "hw", p) for b, d, p in zip(batches, durations, prices)
+    )
+
+
+def _assert_elementwise(configs, policy, *, collect_rate, full, burst):
+    arrs = ConfigArrays.build(configs)
+    got = config_wcl_batch(
+        arrs, policy, collect_rate=collect_rate, full=full, burst=burst
+    )
+    for i, c in enumerate(configs):
+        cr = collect_rate[i] if isinstance(collect_rate, np.ndarray) else collect_rate
+        fl = bool(full[i]) if isinstance(full, np.ndarray) else full
+        exp = config_wcl(c, policy, collect_rate=cr, full=fl, burst=burst)
+        assert got[i] == exp or (math.isinf(got[i]) and math.isinf(exp)), (
+            policy, i, got[i], exp
+        )
+
+
+def _assert_get_wcl(configs, policy, rw, *, full, headroom, burst):
+    arrs = ConfigArrays.build(configs)
+    got = get_wcl_batch(
+        arrs, policy, rw, full=full, headroom=headroom, burst=burst
+    )
+    for i, c in enumerate(configs):
+        fl = bool(full[i]) if isinstance(full, np.ndarray) else full
+        exp = get_wcl(c, policy, rw, full=fl, headroom=headroom, burst=burst)
+        assert got[i] == exp or (math.isinf(got[i]) and math.isinf(exp)), (
+            policy, i, got[i], exp
+        )
+
+
+GRID_BATCHES = (1, 2, 4, 8, 16, 32)
+GRID_DURATIONS = (0.05, 0.111, 0.2, 0.32, 0.8, 1.7)
+GRID_PRICES = (1.0, 1.35, 1.75, 1.0, 2.5, 0.8)
+GRID_CONFIGS = _configs(GRID_BATCHES, GRID_DURATIONS, GRID_PRICES)
+
+
+class TestConfigWclBatchMatchesScalar:
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("cr", [0.0, 1e-12, 0.37, 5.0, 123.456])
+    @pytest.mark.parametrize("full", [True, False])
+    @pytest.mark.parametrize("burst", [0.0, 0.05])
+    def test_scalar_rate_grid(self, policy, cr, full, burst):
+        _assert_elementwise(
+            GRID_CONFIGS, policy, collect_rate=cr, full=full, burst=burst
+        )
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_array_rate_and_mixed_full(self, policy):
+        rng = np.random.default_rng(7)
+        cr = rng.uniform(0.0, 40.0, len(GRID_CONFIGS))
+        cr[0] = 0.0  # starved branch
+        full = rng.random(len(GRID_CONFIGS)) < 0.5
+        _assert_elementwise(
+            GRID_CONFIGS, policy, collect_rate=cr, full=full, burst=0.02
+        )
+
+    def test_hypothesis_random_tables(self):
+        hyp = pytest.importorskip("hypothesis")
+        st = pytest.importorskip("hypothesis.strategies")
+
+        @hyp.given(
+            batches=st.lists(st.integers(1, 64), min_size=1, max_size=12),
+            seed=st.integers(0, 2**32 - 1),
+            policy=st.sampled_from(POLICIES),
+            full=st.booleans(),
+            burst=st.floats(0.0, 0.5),
+        )
+        @hyp.settings(max_examples=120, deadline=None)
+        def check(batches, seed, policy, full, burst):
+            rng = np.random.default_rng(seed)
+            durations = rng.uniform(1e-3, 3.0, len(batches))
+            prices = rng.uniform(0.1, 4.0, len(batches))
+            configs = _configs(batches, durations, prices)
+            cr = float(rng.uniform(0.0, 60.0))
+            _assert_elementwise(
+                configs, policy, collect_rate=cr, full=full, burst=burst
+            )
+            crs = rng.uniform(0.0, 60.0, len(configs))
+            fulls = rng.random(len(configs)) < 0.5
+            _assert_elementwise(
+                configs, policy, collect_rate=crs, full=fulls, burst=burst
+            )
+
+        check()
+
+
+class TestGetWclBatchMatchesScalar:
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("rw", [0.0, 0.31, 4.7, 55.0])
+    @pytest.mark.parametrize("full", [True, False])
+    @pytest.mark.parametrize("headroom", [0.0, 0.15])
+    @pytest.mark.parametrize("burst", [0.0, 0.04])
+    def test_grid(self, policy, rw, full, headroom, burst):
+        _assert_get_wcl(
+            GRID_CONFIGS, policy, rw, full=full, headroom=headroom, burst=burst
+        )
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("headroom", [0.0, 0.2])
+    def test_mixed_full_array(self, policy, headroom):
+        rng = np.random.default_rng(11)
+        full = rng.random(len(GRID_CONFIGS)) < 0.5
+        _assert_get_wcl(
+            GRID_CONFIGS, policy, 3.3, full=full, headroom=headroom, burst=0.01
+        )
+
+
+def _plan_key(plan):
+    return (
+        plan.feasible,
+        plan.cost,
+        tuple(sorted((m, repr(s)) for m, s in plan.schedules.items())),
+    )
+
+
+class TestPlanBitEquality:
+    """vectorized=True and =False must agree plan-for-plan, bit for bit."""
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_default_cascade(self, policy):
+        suite = workload_suite(40)
+        vec = Planner(PlannerOptions(policy=policy, vectorized=True))
+        sca = Planner(PlannerOptions(policy=policy, vectorized=False))
+        for wl in suite:
+            assert _plan_key(vec.plan(wl, PROFILES)) == _plan_key(
+                sca.plan(wl, PROFILES)
+            )
+
+    @pytest.mark.parametrize(
+        "split", ["lc", "throughput", "even", "quantized"]
+    )
+    def test_each_splitter(self, split):
+        suite = workload_suite(25)
+        vec = Planner(PlannerOptions(split=split, vectorized=True))
+        sca = Planner(PlannerOptions(split=split, vectorized=False))
+        for wl in suite:
+            assert _plan_key(vec.plan(wl, PROFILES)) == _plan_key(
+                sca.plan(wl, PROFILES)
+            )
+
+    @pytest.mark.parametrize(
+        "opts",
+        [
+            dict(headroom=0.1),
+            dict(burst_aware=True),
+            dict(k_tuples=2),
+            dict(max_batch=8),
+            dict(node_merge=False, cost_direct=False),
+        ],
+    )
+    def test_option_variants(self, opts):
+        suite = workload_suite(20)
+        vec = Planner(PlannerOptions(vectorized=True, **opts))
+        sca = Planner(PlannerOptions(vectorized=False, **opts))
+        for wl in suite:
+            assert _plan_key(vec.plan(wl, PROFILES)) == _plan_key(
+                sca.plan(wl, PROFILES)
+            )
+
+    @pytest.mark.slow
+    def test_full_suite(self):
+        suite = workload_suite(200)
+        vec = Planner(PlannerOptions(vectorized=True))
+        sca = Planner(PlannerOptions(vectorized=False))
+        for wl in suite:
+            assert _plan_key(vec.plan(wl, PROFILES)) == _plan_key(
+                sca.plan(wl, PROFILES)
+            )
+
+
+class TestDpSplitter:
+    """split="dp" realizes the brute-force DP optimum."""
+
+    def test_matches_bruteforce_optimum(self):
+        from repro.core.bruteforce import optimal_cost
+
+        suite = workload_suite(15)
+        dp = Planner(PlannerOptions(split="dp", reassign=0))
+        for wl in suite:
+            opt = optimal_cost(wl, PROFILES)
+            plan = dp.plan(wl, PROFILES)
+            if math.isinf(opt):
+                continue
+            assert plan.feasible
+            # The plan schedules each module at the DP-recovered budget
+            # with the same scheduler the curves were priced with, so the
+            # cost must equal the DP optimum exactly (reassigner disabled).
+            assert plan.cost <= opt + 1e-9, (wl, plan.cost, opt)
+
+    def test_reassigner_only_improves(self):
+        suite = workload_suite(10)
+        bare = Planner(PlannerOptions(split="dp", reassign=0))
+        full = Planner(PlannerOptions(split="dp"))
+        for wl in suite:
+            a, b = bare.plan(wl, PROFILES), full.plan(wl, PROFILES)
+            if a.feasible:
+                assert b.feasible and b.cost <= a.cost + 1e-12
+
+    def test_dp_beats_or_ties_lc(self):
+        # Compare on workloads feasible for both: budget quantization can
+        # (rarely) make the DP grid infeasible where the continuous LC
+        # split squeezes through — the fig5 bench reports that separately
+        # as the "feasible suite".
+        suite = workload_suite(15)
+        dp = Planner(PlannerOptions(split="dp"))
+        lc = Planner(PlannerOptions(split="lc"))
+        wins = ties = 0
+        for wl in suite:
+            pd, pl = dp.plan(wl, PROFILES), lc.plan(wl, PROFILES)
+            if not (pl.feasible and pd.feasible):
+                continue
+            # grid quantization can cost the DP a hair; never more than 2%
+            assert pd.cost <= pl.cost * 1.02 + 1e-9
+            if pd.cost < pl.cost - 1e-9:
+                wins += 1
+            elif pd.cost <= pl.cost + 1e-9:
+                ties += 1
+        assert wins + ties > 0
