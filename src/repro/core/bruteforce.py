@@ -22,6 +22,37 @@ from .residual import schedule_module
 
 INF = math.inf
 
+# Cross-workload curve cache.  Workloads whose (rate, slo) land in the same
+# ~0.5% log-quantized bucket share one curve: the first workload to touch a
+# bucket prices it at its *exact* (T, slo) and later bucket-mates reuse that
+# curve.  Identical rates/SLOs (the replayed-suite and repeated-preset case
+# the ROADMAP's ~60 ms/workload figure is dominated by) therefore hit with
+# zero approximation; distinct-but-close rates pay at most the bucket width
+# in rate error.  Curves are keyed on the full profile (frozen/hashable), so
+# a profile swap can never serve a stale curve.
+_CURVE_STEP = math.log(1.005)
+_CURVE_CACHE: dict[tuple, list[float]] = {}
+_CURVE_CACHE_MAX = 4096
+_CURVE_STATS = {"hits": 0, "misses": 0}
+
+
+def _quantized(x: float) -> int:
+    """Log-bucket index of a positive quantity (~0.5% relative width)."""
+    if x <= 0.0:
+        return -1
+    return math.ceil(math.log(x) / _CURVE_STEP - 1e-9)
+
+
+def curve_cache_clear() -> None:
+    """Drop every cached cost curve (benchmarks' cold-cache baseline)."""
+    _CURVE_CACHE.clear()
+    _CURVE_STATS["hits"] = _CURVE_STATS["misses"] = 0
+
+
+def curve_cache_stats() -> dict[str, int]:
+    """Hit/miss/size counters since the last `curve_cache_clear`."""
+    return {**_CURVE_STATS, "size": len(_CURVE_CACHE)}
+
 
 def _module_cost_curve(
     m: str,
@@ -32,7 +63,35 @@ def _module_cost_curve(
     policy: Policy,
     use_dummy: bool,
 ) -> list[float]:
-    """cost[k] = full scheduler cost of module m at budget k * slo / nq."""
+    """cost[k] = full scheduler cost of module m at budget k * slo / nq.
+
+    Cached across workloads by quantized (rate, slo) bucket — see the cache
+    comment above.  Returned lists are shared and must be treated read-only
+    (every caller only indexes them).
+    """
+    key = (m, _quantized(T), _quantized(slo), nq, policy, use_dummy, profile)
+    cached = _CURVE_CACHE.get(key)
+    if cached is not None:
+        _CURVE_STATS["hits"] += 1
+        return cached
+    _CURVE_STATS["misses"] += 1
+    if len(_CURVE_CACHE) >= _CURVE_CACHE_MAX:
+        _CURVE_CACHE.clear()
+    curve = _module_cost_curve_uncached(m, T, slo, nq, profile, policy, use_dummy)
+    _CURVE_CACHE[key] = curve
+    return curve
+
+
+def _module_cost_curve_uncached(
+    m: str,
+    T: float,
+    slo: float,
+    nq: int,
+    profile: ModuleProfile,
+    policy: Policy,
+    use_dummy: bool,
+) -> list[float]:
+    """The uncached curve evaluation (see `_module_cost_curve`)."""
     q = slo / nq
     cost = [INF] * (nq + 1)
     # Budgets where the cost can change: each config's wcl is a breakpoint.

@@ -79,13 +79,67 @@ def _edges(sp: SP) -> list[tuple[str, str]]:
 
 
 def sp_latency(sp: SP, weight: Mapping[str, float] | Callable[[str], float]) -> float:
-    """End-to-end (longest-path) latency with per-module weights."""
+    """End-to-end (longest-path) latency with per-module weights.
+
+    The recursive reference; `AppDAG.latency` evaluates the same tree via a
+    precompiled postorder program (`compile_sp`, bit-equal by construction)
+    so hot callers pay no per-call recursion or isinstance dispatch.
+    """
     w = weight if callable(weight) else weight.__getitem__
     if isinstance(sp, Leaf):
         return w(sp.name)
     if isinstance(sp, Series):
         return sum(sp_latency(p, weight) for p in sp.parts)
     return max(sp_latency(p, weight) for p in sp.parts)
+
+
+# postorder program opcodes (`compile_sp` / `sp_latency_program`)
+_OP_LEAF, _OP_SERIES, _OP_PAR = 0, 1, 2
+
+
+def compile_sp(sp: SP) -> "tuple[tuple[int, object], ...]":
+    """Flatten an SP tree into a postorder evaluation program.
+
+    The program is a tuple of ``(opcode, arg)`` pairs: ``LEAF`` pushes the
+    module's weight, ``SERIES``/``PAR`` pop their ``arg`` most recent child
+    values and push the sum/max.  Children appear left-to-right, so an
+    explicit-stack evaluation performs float additions and max-comparisons
+    in exactly the order `sp_latency`'s recursion does — the two are
+    bit-equal, not merely close (pinned by ``tests/test_dag``).
+    """
+    prog: list[tuple[int, object]] = []
+    stack: list[tuple[SP, bool]] = [(sp, False)]
+    while stack:
+        node, visited = stack.pop()
+        if isinstance(node, Leaf):
+            prog.append((_OP_LEAF, node.name))
+        elif visited:
+            op = _OP_SERIES if isinstance(node, Series) else _OP_PAR
+            prog.append((op, len(node.parts)))
+        else:
+            stack.append((node, True))
+            for p in reversed(node.parts):
+                stack.append((p, False))
+    return tuple(prog)
+
+
+def sp_latency_program(
+    prog: "tuple[tuple[int, object], ...]",
+    weight: Mapping[str, float] | Callable[[str], float],
+) -> float:
+    """Evaluate a `compile_sp` program (see there for the bit-equality
+    contract with `sp_latency`)."""
+    w = weight if callable(weight) else weight.__getitem__
+    vals: list[float] = []
+    for op, arg in prog:
+        if op == _OP_LEAF:
+            vals.append(w(arg))
+        else:
+            i = len(vals) - arg
+            combined = sum(vals[i:]) if op == _OP_SERIES else max(vals[i:])
+            del vals[i:]
+            vals.append(combined)
+    return vals[0]
 
 
 def sp_critical_masks(
@@ -181,6 +235,10 @@ class AppDAG:
 
     def __post_init__(self):
         object.__setattr__(self, "modules", tuple(_leaves(self.sp)))
+        # latency() runs in allocator/control hot loops: evaluate the SP
+        # tree through a precompiled postorder program instead of per-call
+        # recursion (bit-equal to `sp_latency` — see `compile_sp`)
+        object.__setattr__(self, "_latency_prog", compile_sp(self.sp))
 
     @property
     def edges(self) -> list[tuple[str, str]]:
@@ -219,7 +277,7 @@ class AppDAG:
         return out
 
     def latency(self, weights: Mapping[str, float]) -> float:
-        return sp_latency(self.sp, weights)
+        return sp_latency_program(self._latency_prog, weights)
 
     @property
     def depth(self) -> int:

@@ -16,6 +16,10 @@ event simulation at full scale.
       --pipeline --epoch 2.0 --arrivals diurnal --trace trace.json
                                       # observability on: per-epoch metrics,
                                       # SLO-miss forensics, Perfetto trace
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+      --pipeline --epoch 2.0 --chaos  # one seeded machine crash per epoch:
+                                      # watchdog detection, re-queue recovery,
+                                      # failure replan + warm-spare promotion
 """
 from __future__ import annotations
 
@@ -31,8 +35,30 @@ from ..core.dag import AppDAG
 from ..core.harpagon import Planner
 from ..models import Model
 from ..profiling import arch_profile
-from ..serving import ControlLoopConfig, ServingEngine, SharedPool
+from ..serving import ControlLoopConfig, FaultConfig, ServingEngine, SharedPool
 from ..serving.arrivals import trace_arrivals
+
+
+def _make_faults(args) -> "FaultConfig | None":
+    """Resolve --chaos into a `FaultConfig` (None when the flag is absent).
+
+    ``--chaos MTBF`` arms the seeded exponential crash process; a bare
+    ``--chaos`` derives a deterministic schedule instead — one crash per
+    epoch midpoint under ``--epoch``, a single mid-run crash otherwise.
+    """
+    if args.chaos is None:
+        return None
+    if args.chaos > 0.0:
+        return FaultConfig(mtbf=args.chaos)
+    horizon = args.requests / args.rate
+    if args.epoch:
+        sched = tuple(
+            (args.epoch * (k + 0.5), "crash")
+            for k in range(int(horizon / args.epoch))
+        )
+    else:
+        sched = ((horizon / 2.0, "crash"),)
+    return FaultConfig(schedule=sched)
 
 
 def _serve_pool(args, archs, profiles) -> None:
@@ -65,6 +91,7 @@ def _serve_pool(args, archs, profiles) -> None:
         pipeline=True,
         control=control,
         observability=args.trace is not None,
+        faults=_make_faults(args),
     )
     print(res.summary())
     print(
@@ -112,6 +139,15 @@ def main() -> None:
         "per-tenant devices) instead of chaining the archs in series",
     )
     ap.add_argument(
+        "--chaos", type=float, nargs="?", const=0.0, default=None,
+        metavar="MTBF",
+        help="seeded fault injection (requires --pipeline): machine crashes "
+        "with the given mean-time-between-failures in seconds (omit the "
+        "value for one crash per epoch with --epoch, or one mid-run crash "
+        "without it) — exercises watchdog detection, frame-conserving "
+        "re-queue, failure replans, and warm-spare promotion",
+    )
+    ap.add_argument(
         "--trace", nargs="?", const="trace.json", default=None, metavar="PATH",
         help="enable the observability layer: print the per-epoch metrics "
         "table and the SLO-miss forensics report, and export a Chrome/"
@@ -121,6 +157,9 @@ def main() -> None:
     args = ap.parse_args()
     if args.epoch and not args.pipeline:
         ap.error("--epoch requires --pipeline (the control loop lives in "
+                 "the pipelined serving loop)")
+    if args.chaos is not None and not args.pipeline:
+        ap.error("--chaos requires --pipeline (faults fire as events in "
                  "the pipelined serving loop)")
 
     archs = args.arch.split(",")
@@ -145,6 +184,8 @@ def main() -> None:
     print(plan.summary())
     if not plan.feasible:
         raise SystemExit("infeasible workload")
+
+    faults = _make_faults(args)
 
     executors = {}
     if args.real:
@@ -184,11 +225,18 @@ def main() -> None:
         control=control,
         service_time="live" if (args.real and args.pipeline) else None,
         observability=args.trace is not None,
+        faults=faults,
     )
     print(
         f"served {len(res.e2e_latencies)} requests: SLO attainment "
         f"{100 * res.attainment:.2f}%  p99={res.p99:.4f}s  slo={args.slo}s"
     )
+    if res.faults is not None:
+        print(
+            f"  chaos: {res.faults['injected']} faults injected, "
+            f"{res.faults['killed']} machines declared dead, "
+            f"{res.faults['requeued']} frames re-queued to survivors"
+        )
     for m, st in res.module_stats.items():
         print(f"  {m}: batches={st.batches} max_latency={st.max_latency:.4f}s")
     if res.epochs:

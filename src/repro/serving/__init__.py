@@ -39,6 +39,14 @@ Layers, ingress to silicon:
   frame classified into exactly one cause, conservation-checked).
   Selected via ``ServingEngine.run(observability=True)`` (or an
   ``ObservabilityConfig``); results are bit-identical with it on or off.
+* ``faults``    — seeded deterministic fault injection (machine crash,
+  transient straggler, whole-device loss) firing as events inside the
+  pipelined loop, with watchdog-based detection (suspect → dead on missed
+  batch heartbeats), frame-conserving re-queue recovery, out-of-band
+  failure replans with warm-spare promotion, and allocator repacks on
+  shared-device death.  Selected via ``ServingEngine.run(pipeline=True,
+  faults=FaultConfig(...))``; disabled ⇒ bit-exact with the fault-free
+  engine.
 * ``tenancy``   — the multi-tenant shared pool: a device-centric plan view
   (`DevicePlan`), a global allocator FFD-packing fractional module residues
   onto shared devices under an interference-aware e2e-SLO guard, and
@@ -83,6 +91,7 @@ from .arrivals import (
 from .control import ControlLoopConfig, ControlRuntime, EpochRecord, serving_cost
 from .engine import ModuleStats, ServeResult, ServingEngine
 from .events import simulate_module_events
+from .faults import FAULT_KINDS, FaultConfig, FaultRuntime
 from .frontend import (
     ClosedLoopClients,
     FrontendConfig,
@@ -104,6 +113,7 @@ from .replay import ModuleReplay, expand_fanout, replay_machine, replay_module
 from .reference import engine_run_reference, simulate_reference
 from .service_time import (
     AnalyticServiceTime,
+    DegradedServiceTime,
     InterferenceServiceTime,
     LiveServiceTime,
     ServiceTimeSource,
@@ -125,8 +135,12 @@ __all__ = [
     "ClosedLoopClients",
     "ControlLoopConfig",
     "ControlRuntime",
+    "DegradedServiceTime",
     "EpochRecord",
     "FanoutSpec",
+    "FAULT_KINDS",
+    "FaultConfig",
+    "FaultRuntime",
     "DevicePlan",
     "FrontendConfig",
     "GlobalAllocator",

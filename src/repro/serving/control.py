@@ -547,3 +547,69 @@ class ControlRuntime:
             # repacks shared devices around this tenant's new plan
             cfg.on_swap(t, new_plan)
         return updates or None
+
+    def on_failure(self, t: float, module: str) -> "dict[str, StageUpdate] | None":
+        """Out-of-band failure replan: a machine of ``module`` was declared
+        dead mid-epoch (`faults` watchdog) and its stage is now running one
+        machine short of what the live plan provisioned.
+
+        Unlike :meth:`on_epoch` this does not re-estimate the rate — the
+        offered load did not change, the capacity did.  The planner is
+        forced to re-derive ``module``'s schedule against the last epoch's
+        target (warm-start repair leaves the healthy modules alone), and
+        the failed module's stage update is emitted **unconditionally**:
+        even when the replanned schedule is numerically identical to the
+        live one, the stage must re-expand its machine list because the
+        dead core is fenced out of `ModuleStage.apply_update`'s revival
+        pool — the update is what creates the replacement (promoting the
+        warm spare when one is parked).  The failure replan is appended to
+        :attr:`history` as its own audit record (``actions`` marks the
+        failed module), so serving-cost integration and forensics see the
+        recovery epoch.
+        """
+        cfg = self.cfg
+        last = self.history[-1]
+        target = last.target
+        new_rates = {m: target * f for m, f in self.fanouts.items()}
+        profiles = corrected_profiles(self.profiles, self.scales)
+        new_plan = self.planner.replan(
+            self.plan,
+            new_rates,
+            profiles,
+            tolerance=cfg.tolerance,
+            cost_guard=cfg.cost_guard,
+            force=frozenset({module}),
+        )
+        updates: dict[str, StageUpdate] = {}
+        changed: set[str] = {module}
+        swapped = False
+        if new_plan.feasible:
+            delta = self.plan.diff(new_plan)
+            self.plan = new_plan
+            changed |= set(delta.changed_modules)
+            swapped = True
+        for m in sorted(changed):
+            s = self.plan.schedules.get(m)
+            if s is None or not s.allocs:
+                continue  # never swap a stage down to zero machines
+            machines = expand_machines(list(s.allocs))
+            updates[m] = StageUpdate(
+                machines=machines,
+                timeout=self.timeout_of(s, machines, self.plan),
+                phantom_target=(
+                    sum(a.rate + a.dummy for a in s.allocs) if self.dummies else 0.0
+                ),
+            )
+        actions = dict(self.plan.provenance)
+        actions[module] = f"failure_replan({actions.get(module, 'kept')})"
+        self.history.append(
+            EpochRecord(
+                t=t, rate_est=last.rate_est, target=target,
+                version=self.plan.version, cost=self.plan.cost,
+                feasible=self.plan.feasible, swapped=swapped and bool(updates),
+                actions=actions,
+            )
+        )
+        if swapped and updates and cfg.on_swap is not None:
+            cfg.on_swap(t, self.plan)
+        return updates or None

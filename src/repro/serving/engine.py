@@ -58,6 +58,7 @@ from ..core.dispatch import (
 from ..core.harpagon import Plan
 from .arrivals import make_arrivals
 from .events import simulate_module_events
+from .faults import FaultConfig, FaultRuntime
 from .frontend import FrontendConfig, make_admission
 from .frontend.clients import closed_loop_ingress
 from .frontend.dummy import merge_phantoms, phantom_times
@@ -72,7 +73,12 @@ from .replay import (
     replay_module,
     runs_to_assignment,
 )
-from .service_time import LiveServiceTime, ServiceTimeSource, resolve_service_time
+from .service_time import (
+    DegradedServiceTime,
+    LiveServiceTime,
+    ServiceTimeSource,
+    resolve_service_time,
+)
 
 
 @dataclass
@@ -99,6 +105,9 @@ class ServeResult:
     epochs: "list | None" = None      # EpochRecords when run(control=...)
     metrics: "object | None" = None   # MetricsSnapshot when run(observability=...)
     trace: "object | None" = None     # TraceRecorder when tracing was enabled
+    # fault-injection tally when run(faults=...): faults injected, machines
+    # declared dead, unfinished members re-queued to surviving siblings
+    faults: "dict[str, int] | None" = None
 
     @property
     def offered(self) -> int:
@@ -299,6 +308,7 @@ class ServingEngine:
         control: "object | None" = None,
         service_time: "str | ServiceTimeSource | None" = None,
         observability: "bool | object | None" = None,
+        faults: "FaultConfig | None" = None,
     ) -> ServeResult:
         """Serve ``n_frames`` frames arriving at ``offered_rate`` (default:
         the provisioned ``frame_rate``) through the planned DAG.
@@ -340,6 +350,16 @@ class ServingEngine:
         registry, returned as ``ServeResult.trace`` / ``.metrics``.  The
         sink is write-only — results are bit-identical with it on, off, or
         sampled.  Off (``None``, the default) costs nothing.
+
+        ``faults`` (a `repro.serving.faults.FaultConfig`, pipeline mode
+        only) arms the seeded fault injector: machine crashes, transient
+        stragglers, and whole-device losses fire as events inside the
+        co-simulation, a batch-duration watchdog escalates unresponsive
+        machines suspect → dead, dead machines' unfinished work re-queues
+        to surviving siblings, and the control plane (when one runs)
+        force-replans the failed module out-of-band.  A disabled config
+        (neither ``mtbf`` nor ``schedule`` set) is treated exactly like
+        ``faults=None`` — bit-exact with the injector absent.
         """
         fe = frontend or FrontendConfig()
         obs = Observability.make(observability)
@@ -352,13 +372,24 @@ class ServingEngine:
                 "control= (epoch-based plan hot-swap) requires pipeline mode: "
                 "the flat path replays whole modules and cannot swap mid-run"
             )
+        if faults is not None:
+            if not isinstance(faults, FaultConfig):
+                raise TypeError(f"faults= expects FaultConfig, got {faults!r}")
+            if not faults.enabled:
+                faults = None  # nothing to fire: identical to faults=None
+        if faults is not None and not pipeline:
+            raise ValueError(
+                "faults= (seeded fault injection) requires pipeline mode: "
+                "the flat path replays whole modules and has no machines to "
+                "fail mid-run"
+            )
         src = resolve_service_time(service_time, self.executors)
         if pipeline:
             return self._run_pipeline(
                 n_frames, frame_rate, fe, ctrl,
                 arrivals=arrivals, seed=seed, timeout=timeout, tail=tail,
                 offered_rate=offered_rate, cfg=pipeline, control=control,
-                service_time=src, obs=obs,
+                service_time=src, obs=obs, faults=faults,
             )
         if fe.clients is not None:
             warnings.warn(
@@ -467,6 +498,7 @@ class ServingEngine:
         control=None,
         service_time: "ServiceTimeSource | None" = None,
         obs: "Observability | None" = None,
+        faults: "FaultConfig | None" = None,
     ) -> ServeResult:
         """Multi-module pipelined co-simulation (`repro.serving.pipeline`)."""
         from .control import ControlLoopConfig, ControlRuntime, plan_e2e_hint
@@ -481,6 +513,13 @@ class ServingEngine:
             # real executors in pipeline mode: co-simulate against measured
             # step times (timed per batch, steady-state cached per config)
             service_time = LiveServiceTime(self.executors)
+        rt_faults = None
+        if faults is not None:
+            rt_faults = FaultRuntime(faults)
+            # straggler faults inflate durations live through the
+            # service-time hook: the wrapper holds the injector's slowdown
+            # table by reference, so entering/leaving it needs no stage state
+            service_time = DegradedServiceTime(rt_faults.slow, service_time)
         wl: Workload = self.plan.workload
         topo = topo_sort(wl.app.modules, wl.app.edges)
         sources = [m for m in topo if not wl.app.parents(m)]
@@ -572,14 +611,15 @@ class ServingEngine:
                 wl.app, stages, n_frames,
                 clients=fe.clients, pace=pace, admission=ctrl,
                 tail=tail, seed=seed, control=rt, e2e_hint=e2e_hint,
-                obs=obs, **perf,
+                obs=obs, faults=rt_faults, **perf,
             )
         else:
             issue = make_arrivals(arrivals, n_frames, pace, seed=seed)
             res = run_pipeline(
                 wl.app, stages, n_frames,
                 issue=issue, admission=ctrl, tail=tail, seed=seed,
-                control=rt, e2e_hint=e2e_hint, obs=obs, **perf,
+                control=rt, e2e_hint=e2e_hint, obs=obs, faults=rt_faults,
+                **perf,
             )
         stats = {}
         for m in topo:
@@ -599,6 +639,15 @@ class ServingEngine:
             attempts=res.attempts,
             pipeline=res,
             epochs=rt.history if rt is not None else None,
+            faults=(
+                {
+                    "injected": rt_faults.n_injected,
+                    "killed": rt_faults.n_killed,
+                    "requeued": rt_faults.n_requeued,
+                }
+                if rt_faults is not None
+                else None
+            ),
         )
         if obs is not None:
             t_end = 0.0

@@ -70,7 +70,7 @@ class MachineCore:
 
     __slots__ = (
         "machine", "timeout", "buf", "token", "armed", "armed_at", "queue",
-        "free_at", "busy", "draining",
+        "free_at", "busy", "draining", "failed", "n_closed", "n_done",
     )
 
     def __init__(self, machine: Machine, timeout: "float | None" = None):
@@ -84,6 +84,9 @@ class MachineCore:
         self.free_at = 0.0
         self.busy = False
         self.draining = False        # excluded from dispatch; finishes its work
+        self.failed = False          # fenced dead (fault injection); never serves
+        self.n_closed = 0            # batches closed — watchdog heartbeat seq
+        self.n_done = 0              # batches whose service completed
 
     @property
     def drained(self) -> bool:
@@ -110,6 +113,7 @@ class MachineCore:
         self.buf = []
         self.token += 1
         self.armed = False
+        self.n_closed += 1
 
     def retime(self, timeout: "float | None") -> "float | None":
         """Change the open batch's flush deadline in place (control-plane
@@ -139,7 +143,7 @@ class MachineCore:
         a real measured executor call); the owner schedules the free event at
         ``end`` and records per-member completion.
         """
-        if self.busy or not self.queue:
+        if self.busy or self.failed or not self.queue:
             return None
         batch_ready, members = self.queue.popleft()
         start = max(batch_ready, self.free_at, now)
@@ -150,6 +154,30 @@ class MachineCore:
     def free(self, t: float) -> None:
         self.busy = False
         self.free_at = t
+
+    def fail(self) -> list:
+        """Machine death: fence the core and surrender its unfinished work.
+
+        Returns every member held in the open formation buffer and the
+        queued (closed, not yet started) batches — the in-service batch is
+        the owner's to reclaim, since the owner tracks started members
+        against its own free event.  The token bump voids pending flush
+        events; ``failed`` voids pending free events (the owner checks it)
+        and refuses any future start.  A failed core reads as
+        ``draining`` + ``drained`` so the next plan hot-swap retires it
+        without ever reviving it.
+        """
+        members = list(self.buf)
+        self.buf = []
+        for _, batch in self.queue:
+            members.extend(batch)
+        self.queue.clear()
+        self.token += 1
+        self.armed = False
+        self.busy = False
+        self.failed = True
+        self.draining = True
+        return members
 
 
 def simulate_module_events(

@@ -1,0 +1,51 @@
+"""Seeded fault injection for the pipelined serving loop.
+
+Every machine in the simulator is immortal by default — the exact
+platform-reliability blind spot *No DNN Left Behind* raises for shared
+cloud inference: one device failure in a consolidated pool silently
+stalls multiple tenants.  This package makes failures first-class,
+deterministic events:
+
+* :class:`FaultConfig` — the user-facing knob set: an MTBF-driven
+  exponential fault process and/or an explicit ``(time, kind)``
+  schedule, the fault taxonomy to draw from, and the detection /
+  recovery parameters.  A default-constructed config is *disabled* and
+  the engine treats it exactly like ``faults=None`` — runs are bit-exact
+  with the injector off.
+* :class:`FaultRuntime` — the seeded per-run state the event loop
+  drives: the fault arrival chain, deterministic victim selection, the
+  straggler slowdown table shared with
+  `service_time.DegradedServiceTime`, and the suspect→dead escalation
+  state of the batch-duration watchdog.
+
+Fault taxonomy (``kind``):
+
+``"crash"``
+    The machine dies silently.  Dispatch keeps feeding it (nobody knows
+    yet); its in-service batch never completes and its queue never
+    drains.  The watchdog heartbeat — armed at every batch close for
+    ``detect_k ×`` the machine's modeled service duration — escalates it
+    suspect → dead, at which point the stage re-queues every unfinished
+    member to surviving siblings (`ModuleStage.fail_machine`) and the
+    control plane force-replans the module (`ControlRuntime.on_failure`).
+``"straggler"``
+    Transient slowdown: the machine's service durations inflate by
+    ``straggler_factor`` for ``straggler_duration`` seconds, then
+    recover.  A straggler that trips the watchdog once is flagged
+    suspect; a completion before the second missed heartbeat clears it
+    (no failover churn for transients that self-heal).
+``"device_loss"``
+    Whole-accelerator death in a shared pool: every co-located machine
+    slot on one physical device crashes at once, and the
+    `GlobalAllocator` re-packs the evicted residues onto surviving
+    devices (`fail_device`).  Outside a shared pool it degrades to a
+    single-machine crash.
+
+Determinism: all draws come from one ``np.random.default_rng(seed)``
+stream, victims are selected from *sorted* candidate lists, and explicit
+schedules fire at their listed times — the same config against the same
+workload produces the same fault history, byte for byte.
+"""
+from .injector import FaultConfig, FaultRuntime, FAULT_KINDS
+
+__all__ = ["FAULT_KINDS", "FaultConfig", "FaultRuntime"]

@@ -12,7 +12,13 @@ each slot issues a frame, the admission controller (if any) admits or sheds
 it at the issue instant, an admitted frame completes after the per-frame
 latency given by the ``latency`` oracle, and the slot frees ``think`` later.
 A shed frame is retried with exponentially-jittered backoff (when enabled)
-until ``max_retries`` is exhausted, then counts as permanently shed.
+until ``max_retries`` is exhausted, then the frame is terminal.  The bound
+exists so a dead or unrecovered stage can't spin the shed→retry loop
+forever: every frame leaves the system in bounded attempts.  Terminal
+classification differs by path — the pipelined co-simulation records an
+exhausted frame as ``dropped`` with a ``retry_exhausted`` trace cause
+(distinct from a first-sight terminal ``shed``), while this deprecated flat
+path folds it into ``shed``.
 
 The oracle makes this a *fixed-point* formulation: the engine seeds it with
 the plan's modeled end-to-end latency, replays the DAG on the generated

@@ -133,6 +133,29 @@ class Observability:
         if self.trace is not None:
             self.trace.instant(t, module, mid, "drain")
 
+    # -- failure lifecycle hooks (always recorded, like control events) ------
+    def suspect(self, t: float, module: str, mid: int) -> None:
+        """The watchdog missed a heartbeat: machine flagged suspect."""
+        if self.trace is not None:
+            self.trace.instant(t, module, mid, "suspect")
+
+    def fail(self, t: float, module: str, mid: int) -> None:
+        """A machine was declared dead (second missed heartbeat)."""
+        if self.metrics is not None:
+            self.metrics.close(module, "machine_dead", 0)
+        if self.trace is not None:
+            self.trace.instant(t, module, mid, "fail")
+
+    def requeue(self, t: float, module: str, mid: int, n: int) -> None:
+        """``n`` unfinished members of a dead machine re-queued to siblings."""
+        if self.trace is not None:
+            self.trace.instant(t, module, mid, "requeue", members=n)
+
+    def promote_spare(self, t: float, module: str, mid: int) -> None:
+        """A warm spare was promoted back into dispatch by a stage update."""
+        if self.trace is not None:
+            self.trace.instant(t, module, mid, "promote_spare")
+
     # -- multi-tenant pool hooks (always recorded, like control events) -----
     def colocate(self, t: float, did: int, app: str, module: str, mid: int,
                  fraction: float) -> None:

@@ -9,6 +9,12 @@ applies):
 
 ============================ ===============================================
 ``admission_shed``           rejected at ingress by the admission policy
+``machine_failure``          lost outright to a machine declared dead: its
+                             in-flight work died with the machine and no
+                             surviving sibling completed it
+``recovery_transient``       late frame whose in-flight work was re-queued
+                             off a dead machine — it completed, but paid
+                             the detection latency + the re-queue wait
 ``admission_drop``           admitted, then lost mid-pipeline (tail drop,
                              zero-completion stage)
 ``cold_start_epoch``         late frame issued before the control plane's
@@ -52,6 +58,8 @@ import numpy as np
 # classification priority order — index == cause code in ``cause_of``
 MISS_CAUSES = (
     "admission_shed",
+    "machine_failure",
+    "recovery_transient",
     "admission_drop",
     "cold_start_epoch",
     "under_provisioned_epoch",
@@ -128,6 +136,13 @@ def classify_misses(pr, slo: float, epochs=None) -> MissReport:
         cause[take] = _CODE[name]
 
     assign(pr.shed, "admission_shed")
+    # failure attribution trumps epoch attribution: a frame touched by a
+    # dead machine missed because of the failure, whatever epoch it hit
+    # (`failed` is None on pre-fault result objects — old pickles/tests)
+    failed = getattr(pr, "failed", None)
+    if failed is not None:
+        assign(pr.dropped & failed, "machine_failure")
+        assign(late & failed, "recovery_transient")
     assign(pr.dropped, "admission_drop")
 
     if epochs:

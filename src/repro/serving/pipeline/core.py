@@ -65,7 +65,9 @@ from ..frontend.clients import ClosedLoopClients
 from .equeue import make_queue
 from .fanout import FanoutSpec
 from .result import FrameTable, PipelineResult
-from .stages import Instance, ModuleStage, _K_ARRIVE, _K_EPOCH, _K_FLUSH, _K_FREE
+from .stages import (
+    Instance, ModuleStage, _K_ARRIVE, _K_EPOCH, _K_FAULT, _K_FLUSH, _K_FREE,
+)
 
 
 @dataclass(frozen=True)
@@ -123,6 +125,7 @@ def run_pipeline(
     event_queue: str = "heap",
     quantum: "float | None" = None,
     obs=None,
+    faults=None,
 ) -> PipelineResult:
     """Co-simulate ``n_frames`` frames through ``stages`` along ``dag``.
 
@@ -146,6 +149,15 @@ def run_pipeline(
     passive telemetry sink: the loop reports batch spans, flush causes,
     sheds, parks, and epoch boundaries to it but never reads it back —
     results are bit-identical with observability on or off.
+
+    ``faults`` (a `repro.serving.faults.FaultRuntime`, or None) arms the
+    seeded fault injector: ``_K_FAULT`` events crash machines silently
+    (dispatch keeps feeding them — nobody knows yet), slow stragglers, and
+    drive the batch-duration watchdog that escalates a machine suspect →
+    dead; a dead machine's unfinished members are re-queued to surviving
+    siblings and the control plane (when present) force-replans the module
+    out of band.  Frame conservation holds under any fault schedule:
+    every frame still resolves completed, shed, or dropped.
     """
     if tail not in ("flush", "drop"):
         raise ValueError(f"unknown tail policy {tail!r}")
@@ -161,6 +173,7 @@ def run_pipeline(
         and issue is not None
         and admission is None
         and control is None
+        and faults is None
     ):
         from . import fastpath
 
@@ -328,6 +341,7 @@ def run_pipeline(
             and st.queue_cap is None
             and not st.parked
             and st.phantom_target <= 0.0
+            and st.machines
         ):
             # macro-event delivery: the whole fanout enters through one
             # dispatcher walk advance (scalar-identical; see deliver_run) —
@@ -337,7 +351,13 @@ def run_pipeline(
             return
         for _ in range(c):
             inst = Instance(f, t)
-            if st.parked or not st.has_space:
+            if st.parked or not st.has_space or not st.machines:
+                # a stage with NO machines (every one declared dead, no
+                # replacement yet) parks blocker-less: a recovery update
+                # rescues the queue, and frames still parked at end of run
+                # wedge into ``dropped`` (graceful degradation, conserved)
+                if not st.machines and faults is not None:
+                    ft.failed[f] = True  # victim of the failure, for forensics
                 st.parked.append((inst, blocker))
                 stalled[f] = True
                 if obs is not None:
@@ -359,7 +379,7 @@ def run_pipeline(
 
     def drain_parked(st: ModuleStage, now: float) -> bool:
         delivered = False
-        while st.parked and st.has_space:
+        while st.parked and st.has_space and st.machines:
             inst, blocker = st.parked.popleft()
             deliver_to(st, inst, now)
             delivered = True
@@ -373,7 +393,10 @@ def run_pipeline(
             del blocked[key]
             um, umid = key
             ust = stages[um]
-            ust.cores[umid].free(now)
+            ucore = ust.cores.get(umid)
+            if ucore is None or ucore.failed:
+                return  # the producer was declared dead while blocked
+            ucore.free(now)
             if ust.start_next(umid, now, push):
                 drain_parked(ust, now)
             revive_phantoms(ust, now)
@@ -391,6 +414,110 @@ def run_pipeline(
                 # partial completion: the frame proceeds with the instances
                 # that did finish (seed semantics: finish = max over done)
                 stage_resolved(m, f, float(finish[m][f]), True, entries, None)
+
+    # -- fault injection / detection / recovery ------------------------------
+    def active_machines() -> "list[tuple[str, int]]":
+        """Crash candidates: every dispatching (non-draining, non-fenced)
+        machine, in deterministic (topo, mid) order."""
+        out = []
+        for m in topo:
+            st = stages[m]
+            for mach in st.machines:
+                core = st.cores.get(mach.mid)
+                if core is not None and not core.failed:
+                    out.append((m, mach.mid))
+        return out
+
+    def declare_dead(m: str, mid: int, t: float) -> None:
+        """Failure verdict: fence the machine, re-queue its work, recover.
+
+        The stage surrenders the dead machine's unfinished real members
+        (`ModuleStage.fail_machine`); each is marked in the forensic
+        ``failed`` column and re-delivered to surviving siblings — or
+        parked (blocker-less) when none survive, to be rescued by the
+        recovery update's replacement machines.  With a control runtime,
+        the module is force-replanned out of band against the reduced
+        machine set (`ControlRuntime.on_failure`); without one, recovery
+        is requeue-only.  A machine an epoch swap already retired from
+        dispatch is reclaimed without the replan (its capacity was already
+        replaced by the swap — only its stranded members need rescue).
+        """
+        st = stages[m]
+        faults.forget(m, mid)
+        if (m, mid) in faults.dead or st.cores.get(mid) is None:
+            return  # verdict already delivered, or the core fully retired
+        faults.dead.add((m, mid))
+        in_dispatch = any(mach.mid == mid for mach in st.machines)
+        reals = st.fail_machine(mid, t)
+        faults.n_killed += 1
+        if obs is not None:
+            obs.fail(t, m, mid)
+        faults.n_requeued += len(reals)
+        if reals:
+            for inst in reals:
+                ft.failed[inst.frame] = True
+            if obs is not None:
+                obs.requeue(t, m, mid, len(reals))
+        for inst in reals:
+            if st.machines and st.has_space and not st.parked:
+                deliver_to(st, inst, t)
+            else:
+                st.parked.append((inst, None))
+                if obs is not None:
+                    obs.park(t, m)
+        if control is not None and in_dispatch and issued < n_frames:
+            updates = control.on_failure(t, m)
+            if updates:
+                for um, upd in updates.items():
+                    stages[um].apply_update(upd, t, push)
+                for um in updates:
+                    drain_parked(stages[um], t)
+
+    def inject_fault(fkind: str, t: float) -> None:
+        """Fire one fault.  Crashes are *silent* — the core is fenced but
+        stays in the dispatch walk until the watchdog declares it dead —
+        because nobody in a real cluster learns of a crash except through
+        missed heartbeats.  Device loss crashes every co-located slot of
+        one physical device at once and repacks the shared pool
+        immediately (the hardware monitor's out-of-band signal)."""
+        cfg = faults.cfg
+        if fkind == "device_loss" and cfg.device_map:
+            did = faults.pick(sorted(set(cfg.device_map.values())))
+            hit = False
+            for (m, mid), d in sorted(cfg.device_map.items()):
+                if d != did:
+                    continue
+                st = stages.get(m)
+                core = st.cores.get(mid) if st is not None else None
+                if core is not None and not core.failed:
+                    core.failed = True
+                    hit = True
+            if hit:
+                faults.n_injected += 1
+                if cfg.on_device_loss is not None:
+                    cfg.on_device_loss(t, did)
+            return
+        cand = active_machines()
+        if fkind == "straggler":
+            victim = faults.pick(cand)
+            if victim is not None:
+                m, mid = victim
+                faults.slow[(m, mid)] = cfg.straggler_factor
+                faults.n_injected += 1
+                push(t + cfg.straggler_duration, _K_FAULT, m, ("recover", mid))
+            return
+        # "crash" (and device_loss outside a shared pool): without a control
+        # plane no replacement ever comes, so prefer a stage that keeps at
+        # least one survivor — a single-machine stage would wedge its whole
+        # app until end-of-stream
+        if control is None:
+            multi = [(m, mid) for m, mid in cand if len(stages[m].machines) > 1]
+            cand = multi or cand
+        victim = faults.pick(cand)
+        if victim is not None:
+            m, mid = victim
+            stages[m].cores[mid].failed = True
+            faults.n_injected += 1
 
     def issue_frame(f: int, t: float, tries: int) -> None:
         nonlocal attempts, issued
@@ -417,9 +544,13 @@ def run_pipeline(
                 and clients.retry_on_shed
                 and tries < clients.max_retries
             )
-            admitted = admission.admit_live(
-                t, backlog, cause="shed_retry" if will_retry else "shed"
-            )
+            if will_retry:
+                cause = "shed_retry"
+            elif clients is not None and clients.retry_on_shed and tries > 0:
+                cause = "retry_exhausted"  # the bounded-retry budget ran out
+            else:
+                cause = "shed"
+            admitted = admission.admit_live(t, backlog, cause=cause)
         else:
             admitted = True
         if admitted:
@@ -447,13 +578,21 @@ def run_pipeline(
             push(t + delay, _K_ARRIVE, None, ("issue", f, tries + 1))
             return
         issue_t[f] = t
-        shed[f] = True
+        exhausted = clients is not None and clients.retry_on_shed and tries > 0
+        if exhausted:
+            # the bounded retry budget ran out: the frame was offered and
+            # re-offered but never entered the pipeline — it counts as
+            # *dropped* (admitted demand the system failed), not shed
+            # (a first-sight rejection), under its own trace cause
+            lost[f] = True
+        else:
+            shed[f] = True
         if obs is not None and (admission is None or admission.obs is None):
             # a wired admission controller already emitted this terminal
             # denial at decision resolution (interim retry denials carry
             # the distinct "shed_retry" cause); only emit here when the
-            # terminal shed would otherwise go unseen
-            obs.shed(t, "shed")
+            # terminal denial would otherwise go unseen
+            obs.shed(t, "retry_exhausted" if exhausted else "shed")
         resolve_shed(f, t)
 
     def resolve_shed(f: int, t: float) -> None:
@@ -481,6 +620,27 @@ def run_pipeline(
                 t_first + 1.0 / st.phantom_target, _K_ARRIVE, None,
                 ("phantom", m, st.phantom_token),
             )
+    if faults is not None:
+        # one pending injection event at a time; each fired fault chains
+        # the next (explicit schedule first, then the seeded MTBF process).
+        # The chain retires with the stream, like the epoch chain.
+        nf = faults.next_fault(t_first)
+        if nf is not None:
+            push(nf[0], _K_FAULT, None, ("inject", nf[1]))
+        wd_k = faults.cfg.detect_k
+
+        def arm_watchdog(m: str, mid: int, core, now: float) -> None:
+            # heartbeat: batch #n_closed must complete (n_done reaches it)
+            # within k x the machine's modeled service, else escalate
+            push(
+                now + wd_k * core.machine.config.duration,
+                _K_FAULT, m, ("watchdog", mid, core.n_closed, core.n_done),
+            )
+
+        for st_ in stages.values():
+            st_.watchdog = arm_watchdog
+            st_.keep_spare = faults.cfg.spare
+
     epoch_armed = False
     relax_armed = False
     relax_every = control.relax_interval if control is not None else None
@@ -599,7 +759,8 @@ def run_pipeline(
                     # arrivals stay rate-limited at the target.  A stage
                     # with queued real batches gets no phantoms: idle-slot
                     # filling must not eat the capacity that drains backlog
-                    if st.has_space and not st.parked and not st.service_backlog:
+                    if (st.has_space and not st.parked and st.machines
+                            and not st.service_backlog):
                         st.stats.phantom += 1
                         if obs is not None:
                             obs.phantom(t, m)
@@ -627,6 +788,22 @@ def run_pipeline(
                 heap.pop()
                 frees.append((nxt[3], nxt[4][0]))
                 nxt = heap.peek()
+            if faults is not None:
+                # fence dead machines: a fenced core's "completion" never
+                # happened (its members are re-queued at the failure
+                # verdict); live completions advance the watchdog heartbeat
+                # and clear any straggler suspicion
+                live = []
+                for m, mid in frees:
+                    core = stages[m].cores.get(mid)
+                    if core is None or core.failed:
+                        continue
+                    core.n_done += 1
+                    faults.clear(m, mid)
+                    live.append((m, mid))
+                frees = live
+                if not frees:
+                    continue
             entries = []
             finished: list[tuple[str, int, int]] = []
             for m, mid in frees:
@@ -671,6 +848,49 @@ def run_pipeline(
             if core is not None and token == core.token and core.buf:
                 st.close(mid, batch_ready=t, now=t, push=push, cause="deadline")
                 drain_parked(st, t)
+        elif kind == _K_FAULT:
+            what = payload[0]
+            if what == "inject":
+                if issued >= n_frames:
+                    continue  # stream fully issued: the injector retires
+                inject_fault(payload[1], t)
+                nf = faults.next_fault(t)
+                if nf is not None:
+                    push(nf[0], _K_FAULT, None, ("inject", nf[1]))
+            elif what == "watchdog":
+                _, mid, seq, done_at_arm = payload
+                m = stage_name
+                st = stages[m]
+                core = st.cores.get(mid)
+                if core is None or (m, mid) in faults.dead:
+                    continue  # retired, or verdict already delivered
+                if not core.failed and all(mc.mid != mid for mc in st.machines):
+                    # a *healthy* machine drained out of dispatch serves its
+                    # queue to completion: unwatched.  A crashed one stays
+                    # watched even after an epoch swap retires it — its
+                    # stranded members still need the failure verdict to be
+                    # reclaimed and re-queued.
+                    continue
+                if core.n_done >= seq:
+                    faults.clear(m, mid)  # heartbeat satisfied in time
+                elif core.n_done > done_at_arm:
+                    # progress since arming — the watched batch is queued
+                    # behind earlier work, not stuck: extend the deadline
+                    push(
+                        t + wd_k * core.machine.config.duration,
+                        _K_FAULT, m, ("watchdog", mid, seq, core.n_done),
+                    )
+                elif faults.escalate(m, mid) == "suspect":
+                    if obs is not None:
+                        obs.suspect(t, m, mid)
+                    push(
+                        t + wd_k * core.machine.config.duration,
+                        _K_FAULT, m, ("watchdog", mid, seq, core.n_done),
+                    )
+                else:  # second missed heartbeat while suspect: dead
+                    declare_dead(m, mid, t)
+            else:  # "recover": a straggler's transient slowdown expires
+                faults.slow.pop((stage_name, payload[1]), None)
         else:  # _K_EPOCH: control-plane boundary (after same-instant events)
             if payload is not None and payload[0] == "relax":
                 # mid-epoch staleness tick: when arrivals run well below the

@@ -49,7 +49,7 @@ class FrameTable:
         "n", "topo", "issue", "shed", "lost", "resolved", "sink_bad",
         "sink_max", "sinks_left", "e2e", "avail", "finish", "pend",
         "parents_left", "child_void", "child_avail", "stalled", "flushed",
-        "fan",
+        "fan", "failed",
     )
 
     def __init__(
@@ -83,6 +83,7 @@ class FrameTable:
         self.stalled = np.zeros(n, dtype=bool)   # parked by backpressure
         self.flushed = np.zeros(n, dtype=bool)   # served from a partial batch
         self.fan = {m: np.zeros(n, dtype=np.int64) for m in topo}
+        self.failed = np.zeros(n, dtype=bool)    # touched by a machine failure
 
     def finalize(self, dag, stats: dict, attempts: int) -> "PipelineResult":
         """Classify every frame and assemble the result (one vector pass).
@@ -115,6 +116,7 @@ class FrameTable:
             stalled=self.stalled,
             flushed=self.flushed,
             fan=self.fan,
+            failed=self.failed,
         )
 
 
@@ -139,6 +141,9 @@ class PipelineResult:
     stalled: "np.ndarray | None" = None
     flushed: "np.ndarray | None" = None
     fan: "dict[str, np.ndarray] | None" = None
+    # frames whose in-flight work was on a machine later declared dead
+    # (re-queued to siblings, or lost when none survived)
+    failed: "np.ndarray | None" = None
     _path_cache: "tuple[np.ndarray, dict[str, np.ndarray]] | None" = field(
         default=None, repr=False, compare=False
     )

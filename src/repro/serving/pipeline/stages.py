@@ -264,6 +264,14 @@ class ModuleStage:
         # wired by `pipeline.core.run_pipeline`
         self.obs = None
         self.flushed_col = None
+        # fault wiring (`repro.serving.faults`, all None/False without an
+        # injector — the hooks are never consulted on the fault-free path):
+        # ``watchdog(name, mid, core, now)`` arms a detection heartbeat at
+        # every batch close; ``keep_spare`` holds the most-recently-drained
+        # machine idle-warm one epoch as failover insurance
+        self.watchdog = None
+        self.keep_spare = False
+        self._spare: "int | None" = None
         self.backlog = 0  # instances delivered but not yet started service
         # deliveries parked by backpressure: (instance, blocker) where
         # blocker is the (stage, mid) whose outputs they are, or None for
@@ -322,11 +330,22 @@ class ModuleStage:
             pool = by_cfg.get(cfg, [])
             # keep work-holding cores first; revive draining cores before
             # creating duplicates (their queued work rejoins the same rank)
-            pool = sorted(pool, key=lambda c: (c.draining, c.drained))
+            # a fenced dead core is never revived — a replacement gets a
+            # fresh id (or promotes the warm spare)
+            pool = sorted(
+                (c for c in pool if not c.failed),
+                key=lambda c: (c.draining, c.drained),
+            )
             for nm in new_ms:
                 if pool:
                     core = pool.pop(0)
                     mid = core.machine.mid
+                    if mid == self._spare:
+                        # warm-spare promotion: the idle-warm machine
+                        # rejoins dispatch instead of a cold add
+                        self._spare = None
+                        if self.obs is not None:
+                            self.obs.promote_spare(now, self.name, mid)
                 else:
                     mid = self._next_mid
                     self._next_mid += 1
@@ -357,10 +376,21 @@ class ModuleStage:
         # flush events tolerate a missing mid), so keeping them would grow
         # the stage without bound across epochs and slow every hot-path
         # scan (service_backlog, quiescence) proportionally to run length
-        for mid in [
+        retire = [
             mid for mid, c in self.cores.items()
             if mid not in claimed and c.draining and c.drained
-        ]:
+        ]
+        if self.keep_spare:
+            # keep the most-recently-drained healthy retiree idle-warm for
+            # one epoch (failover insurance — ROADMAP's lazily-drained warm
+            # machine); last epoch's spare, if still unclaimed, retires now
+            prev = self._spare
+            self._spare = None
+            cand = [m for m in retire if not self.cores[m].failed and m != prev]
+            if cand:
+                self._spare = max(cand)
+                retire.remove(self._spare)
+        for mid in retire:
             del self.cores[mid]
             self.in_service.pop(mid, None)
 
@@ -493,6 +523,12 @@ class ModuleStage:
                 now, self.name, mid, len(core.buf), cause, self.backlog
             )
         core.close(batch_ready)
+        if self.watchdog is not None:
+            # detection heartbeat: the batch must complete within k x its
+            # modeled service or the machine escalates suspect -> dead.
+            # Armed even for a silently-crashed core — that is exactly the
+            # batch whose missed heartbeat reveals the crash.
+            self.watchdog(self.name, mid, core, now)
         self.start_next(mid, now, push)
 
     def start_next(self, mid: int, now: float, push: Callable) -> bool:
@@ -538,6 +574,41 @@ class ModuleStage:
         push(end, _K_FREE, self.name, (mid,))
         return True
 
+    def fail_machine(self, mid: int, now: float) -> "list[Instance]":
+        """Declare machine ``mid`` dead and reclaim its unfinished work.
+
+        Fences the core (`MachineCore.fail`), removes the machine from the
+        dispatch walk, and returns the REAL instances the owner must
+        re-queue to surviving siblings: the batch in service (reclaimed
+        from ``in_service`` — its pending free event is fenced off by the
+        ``failed`` flag), the closed batches queued behind it, and the
+        open formation buffer.  Phantom members are simply dropped (dummy
+        traffic is priced, not conserved).  The fenced core stays in
+        ``cores`` so stale flush/free events die cleanly; the next plan
+        hot-swap retires it.
+
+        Bookkeeping: queued/buffered members leave the backlog here and
+        re-enter it on re-delivery; ``delivered`` rolls back for every
+        surrendered member so the phantom pacing anchor does not count
+        the same instance twice.
+        """
+        core = self.cores.get(mid)
+        if core is None:
+            return []  # fully retired: nothing left to reclaim
+        # The machine may already be out of the dispatch walk (an epoch swap
+        # retired the silently-crashed core before the watchdog's verdict) —
+        # its stranded members are reclaimed all the same.  Idempotence is
+        # the caller's job (`FaultRuntime.dead`): a second call would find
+        # the buffers already emptied and reclaim nothing, but must not
+        # re-roll the bookkeeping.
+        in_flight = list(self.in_service.pop(mid, ()))
+        members = in_flight + core.fail()
+        self.backlog -= len(members) - len(in_flight)
+        self.delivered -= len(members)
+        self.machines = [m for m in self.machines if m.mid != mid]
+        self.dispatcher.update(self.machines)
+        return [i for i in members if i.real]
+
     def discard_leftover(self, mid: int) -> list[Instance]:
         """End-of-stream drop of the open buffer; returns real instances."""
         all_members = self.cores[mid].discard()
@@ -554,5 +625,7 @@ class ModuleStage:
 # swap observes everything that happened up to and including its instant).
 # FREE-before-FLUSH within one stage is outcome-equivalent to the
 # single-module core's FLUSH-before-FREE (both orders start the same FIFO
-# batch at the same time).
-_K_ARRIVE, _K_FREE, _K_FLUSH, _K_EPOCH = 0, 1, 2, 3
+# batch at the same time).  Faults sort last: a batch completing exactly at
+# a crash instant completes, and a detection verdict at an epoch boundary
+# sees the post-swap stage.
+_K_ARRIVE, _K_FREE, _K_FLUSH, _K_EPOCH, _K_FAULT = 0, 1, 2, 3, 4

@@ -179,6 +179,49 @@ class InterferenceServiceTime(ServiceTimeSource):
             self.base.reset()
 
 
+class DegradedServiceTime(ServiceTimeSource):
+    """Stretch straggling machines' durations by live fault slowdowns.
+
+    ``slow`` is the fault injector's straggler table
+    (`faults.FaultRuntime.slow`), held **by reference**: a ``straggler``
+    fault entering a ``(module, machine_id)`` key inflates that machine's
+    service durations mid-run, and the recovery event removing the key
+    restores them — no stage or plan state is touched.  ``base`` is the
+    run's underlying source (trace / live / interference); ``None``
+    stretches the profiled constant.
+
+    ``kind`` is non-analytic on purpose: a straggling machine is not the
+    profiled constant the vectorized flat kernel replays, so fault runs
+    stay on the event loop where per-machine durations are honored.  An
+    empty table is a pure pass-through — with the injector disabled the
+    wrapper is never installed at all, keeping the default path bit-exact.
+    """
+
+    kind = "degraded"
+
+    def __init__(
+        self,
+        slow: "Mapping[tuple[str, int], float]",
+        base: "ServiceTimeSource | None" = None,
+    ):
+        # held by reference, never copied: the fault runtime mutates the
+        # table in place as stragglers come and go
+        self.slow = slow
+        self.base = base
+
+    def duration(self, module: str, machine: Machine, n_members: int) -> float:
+        d = (
+            self.base.duration(module, machine, n_members)
+            if self.base is not None
+            else machine.config.duration
+        )
+        return d * self.slow.get((module, machine.mid), 1.0)
+
+    def reset(self) -> None:
+        if self.base is not None:
+            self.base.reset()
+
+
 class LiveServiceTime(ServiceTimeSource):
     """Measure real executor forwards, cache steady-state per (module, batch).
 

@@ -312,6 +312,84 @@ class GlobalAllocator:
         new = self.pack()
         return new, diff_device_plans(prev, new)
 
+    # -- failure recovery ----------------------------------------------------
+
+    def fail_device(self, did: int) -> "tuple[DevicePlan, DevicePlanDelta]":
+        """A physical device died: evict its slots and re-home them.
+
+        Every slot the dead device hosted — the failed machine itself and
+        any co-located residues that went down with it — is re-packed onto
+        surviving capacity: first-fit over the surviving shared bins under
+        the same capacity + e2e-SLO guard as :meth:`pack`, falling back to
+        opening replacement devices (the pool pays for a new device
+        exactly when no survivor can absorb the residue).  Committed WCL
+        overrides are rebuilt from the surviving packing only, so a slot
+        whose inflation came solely from the dead device stops being
+        charged for it.  Device ids are renumbered densely (the delta
+        records every move); an unknown ``did`` — a stale id from a plan
+        the pool already repacked away — is a no-op returning an empty
+        delta, since the device it named is already gone."""
+        prev = self.device_plan
+        if prev is None:
+            prev = self.pack()
+        dead = None
+        survivors: list[Device] = []
+        for d in prev.devices:
+            if d.did == did:
+                dead = d
+            else:
+                survivors.append(d)
+        if dead is None:
+            return prev, diff_device_plans(prev, prev)
+        self.version += 1
+        # rebuild the committed overrides from what actually survives
+        self._wcl = {}
+        bins = [list(d.slots) for d in survivors]
+        # a surviving bin can take evictees only if it was openable in the
+        # original packing: not an integer cover, not marked dedicated
+        open_bin = [
+            not d.dedicated and d.slots[0].fraction < 1.0 - 1e-12
+            for d in survivors
+        ]
+        for members in bins:
+            if len(members) >= 2:
+                self._commit(members)
+        evictees = sorted(dead.slots, key=lambda s: (-s.fraction, s.key))
+        dedicated_flags = [d.dedicated for d in survivors]
+        for slot in evictees:
+            placed = False
+            for i, members in enumerate(bins):
+                if not (i < len(open_bin) and open_bin[i]):
+                    continue
+                if members[0].config.hardware != slot.config.hardware:
+                    continue
+                if self._fits(members, slot):
+                    members.append(slot)
+                    self._commit(members)
+                    placed = True
+                    break
+            if not placed:
+                bins.append([slot])
+                dedicated_flags.append(False)
+        out: list[Device] = []
+        for new_did, members in enumerate(bins):
+            head = members[0]
+            out.append(
+                Device(
+                    did=new_did,
+                    hardware=head.config.hardware,
+                    unit_price=head.config.unit_price,
+                    slots=tuple(members),
+                    dedicated=dedicated_flags[new_did],
+                )
+            )
+        self.device_plan = DevicePlan(
+            devices=tuple(out),
+            version=self.version,
+            apps=tuple(sorted(self.plans)),
+        )
+        return self.device_plan, diff_device_plans(prev, self.device_plan)
+
 
 __all__ = [
     "AllocatorConfig",

@@ -38,6 +38,7 @@ from ...core.harpagon import Plan
 from ...profiling.interference import InterferenceModel, calibrate
 from ..control import ControlLoopConfig
 from ..engine import ServeResult, ServingEngine
+from ..faults import FaultConfig
 from ..observability import Observability
 from ..service_time import InterferenceServiceTime, resolve_service_time
 from .allocator import AllocatorConfig, GlobalAllocator, dedicated_cost
@@ -238,17 +239,26 @@ class SharedPool:
         control: "ControlLoopConfig | Mapping[str, ControlLoopConfig] | None" = None,
         service_time=None,
         observability=None,
+        faults: "FaultConfig | Mapping[str, FaultConfig] | None" = None,
     ) -> PoolResult:
         """Serve every app of the pool over one simulated horizon.
 
         Arguments mirror `ServingEngine.run`; per-app values may be given
         as mappings keyed by app name (``n_frames``, ``frame_rates``,
-        ``offered_rates``, ``control``).  Each app's arrival stream is
-        seeded with ``seed + its rank`` in sorted-app order, so streams
-        are distinct but the whole pool run is deterministic.
+        ``offered_rates``, ``control``, ``faults``).  Each app's arrival
+        stream is seeded with ``seed + its rank`` in sorted-app order, so
+        streams are distinct but the whole pool run is deterministic.
         ``observability`` builds one pool-level sink (colocate/evict
         instants, occupancy counters — returned as ``PoolResult.trace``)
         and an independent per-app sink per run (on each `ServeResult`).
+
+        ``faults`` arms the seeded injector inside each app's loop; with
+        tenancy enabled the config is wired to the pool before the run —
+        the app's machine slots are mapped to their physical devices (as
+        packed at run start), so a ``device_loss`` fault takes down every
+        co-located slot of one device at once and triggers the allocator's
+        out-of-band `GlobalAllocator.fail_device` repack (evicted residues
+        re-homed onto surviving devices, interference factors refreshed).
         """
         pool_obs = Observability.make(observability)
         dp = self.device_plan
@@ -296,6 +306,36 @@ class SharedPool:
                     repacks.append(delta)
                     self._emit_delta(_obs, t, new_dp, delta)
                 app_control = dc_replace(app_control, on_swap=_on_swap)
+            app_faults = (
+                faults.get(app) if isinstance(faults, Mapping) else faults
+            )
+            if app_faults is not None and self.enabled:
+                # wire the injector to the pool: this app's machine slots
+                # mapped to their physical devices (run-start packing), and
+                # the allocator's out-of-band device-death repack — the
+                # hardware monitor's signal, fired at the injection instant
+                device_map = {
+                    (s.module, s.mid): d.did
+                    for d in self.device_plan.devices
+                    for s in d.slots
+                    if s.app == app
+                }
+                def _on_loss(t, dead_did, _app=app, _factors=factors,
+                             _obs=pool_obs):
+                    new_dp, delta = self.allocator.fail_device(dead_did)
+                    self.device_plan = new_dp
+                    _factors.clear()
+                    _factors.update({
+                        (m, mid): f
+                        for (a, m, mid), f in new_dp.interference_factors(
+                            self.model, _app
+                        ).items()
+                    })
+                    repacks.append(delta)
+                    self._emit_delta(_obs, t, new_dp, delta)
+                app_faults = dc_replace(
+                    app_faults, device_map=device_map, on_device_loss=_on_loss
+                )
             eng = ServingEngine(plan, executors=self.executors.get(app))
             results[app] = eng.run(
                 n,
@@ -312,6 +352,7 @@ class SharedPool:
                 control=app_control,
                 service_time=src,
                 observability=observability,
+                faults=app_faults,
             )
         return PoolResult(
             results=results,

@@ -66,3 +66,47 @@ def test_appdag_topo_order():
     app = AppDAG("t", series(Leaf("a"), par(Leaf("b"), Leaf("c")), Leaf("d")))
     order = app.topo_order()
     _assert_topological(order, app.modules, app.edges)
+
+
+# ---------------------- iterative SP latency program (ISSUE-10 satellite)
+
+
+def _random_sp(rng, depth, counter):
+    """A random series/parallel tree over fresh leaf names."""
+    if depth == 0 or rng.random() < 0.3:
+        counter[0] += 1
+        return Leaf(f"n{counter[0]}")
+    parts = [
+        _random_sp(rng, depth - 1, counter)
+        for _ in range(rng.randint(2, 4))
+    ]
+    return series(*parts) if rng.random() < 0.5 else par(*parts)
+
+
+def test_latency_program_bit_equal_to_recursion():
+    """`AppDAG.latency` (iterative postorder program) is BIT-equal to the
+    `sp_latency` recursion on random SP trees and random float weights —
+    same IEEE-754 operations in the same order, pinned."""
+    from repro.core.dag import compile_sp, sp_latency, sp_latency_program
+
+    rng = random.Random(42)
+    for trial in range(50):
+        counter = [0]
+        sp = _random_sp(rng, depth=rng.randint(1, 5), counter=counter)
+        app = AppDAG(f"t{trial}", sp)
+        w = {m: rng.uniform(1e-6, 10.0) for m in app.modules}
+        ref = sp_latency(sp, w)
+        assert app.latency(w) == ref  # exact, not approx
+        assert sp_latency_program(compile_sp(sp), w) == ref
+
+
+def test_latency_program_single_leaf_and_callable_weights():
+    from repro.core.dag import sp_latency
+
+    app = AppDAG("one", series(Leaf("only")))
+    assert app.latency({"only": 0.1}) == sp_latency(app.sp, {"only": 0.1})
+    nested = AppDAG(
+        "n", series(Leaf("a"), par(series(Leaf("b"), Leaf("c")), Leaf("d")))
+    )
+    w = {"a": 0.3, "b": 0.7, "c": 0.2, "d": 1.1}
+    assert nested.latency(w.__getitem__) == sp_latency(nested.sp, w.__getitem__)

@@ -397,6 +397,10 @@ class TestPipelineShedTelemetry:
             pipeline=True, observability=True,
         )
         names = [e[4] for e in res.trace.events() if e[0] == 1]
-        assert res.shed > 0
+        # with retry_on_shed every terminal denial follows a re-offer, so
+        # it is an exhausted-retry DROP under its own instant name; the
+        # instants stay summable as terminals per cause
+        assert res.dropped > 0 and res.shed == 0
         assert names.count("shed_retry") > 0  # interim denials are distinct
+        assert names.count("retry_exhausted") == res.dropped
         assert names.count("shed") == res.shed

@@ -261,3 +261,45 @@ class TestDpSplitter:
             elif pd.cost <= pl.cost + 1e-9:
                 ties += 1
         assert wins + ties > 0
+
+
+class TestCurveCache:
+    """The module cost-curve cache (ISSUE-10 satellite): curves are cached
+    across workloads by quantized (rate, slo) bucket, computed exact at the
+    first-seen rate/SLO in each bucket — replayed suites hit with zero
+    approximation, and cached results are value-identical to cold ones."""
+
+    def test_warm_results_identical_to_cold(self):
+        from repro.core.bruteforce import (
+            curve_cache_clear, curve_cache_stats, optimal_cost,
+        )
+
+        suite = workload_suite(12)
+        curve_cache_clear()
+        cold = [optimal_cost(wl, PROFILES) for wl in suite]
+        stats = curve_cache_stats()
+        assert stats["misses"] > 0
+        warm = [optimal_cost(wl, PROFILES) for wl in suite]
+        assert warm == cold  # exact, not approx: the same curve objects
+        after = curve_cache_stats()
+        assert after["hits"] > stats["hits"]
+        assert after["misses"] == stats["misses"]  # full warm hit
+
+    def test_dp_splitter_unchanged_by_cache_state(self):
+        from repro.core.bruteforce import curve_cache_clear
+
+        suite = workload_suite(6)
+        dp = Planner(PlannerOptions(split="dp"))
+        curve_cache_clear()
+        cold = [dp.plan(wl, PROFILES).cost for wl in suite]
+        warm = [dp.plan(wl, PROFILES).cost for wl in suite]
+        assert warm == cold
+
+    def test_quantization_buckets_are_log_spaced(self):
+        from repro.core.bruteforce import _quantized
+
+        # ~0.5% log buckets: a tiny perturbation shares the bucket, a
+        # 1% move does not; non-positive inputs get the sentinel bucket
+        assert _quantized(100.0) == _quantized(100.0001)
+        assert _quantized(100.0) != _quantized(101.0)
+        assert _quantized(0.0) == _quantized(-5.0) == -1
